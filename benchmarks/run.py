@@ -1,0 +1,127 @@
+"""Benchmark harness: one section per paper table/figure + app numerics +
+the roofline report from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --fast     # skip app numerics
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def print_table(name, rows):
+    print(f"\n=== {name} ===")
+    widths = [max(len(str(r[i])) for r in rows) for i in range(len(rows[0]))]
+    for r in rows:
+        print("  " + "  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+
+
+def print_checks(checks, failures):
+    for desc, ok, detail in checks:
+        mark = "PASS" if ok else "FAIL"
+        print(f"  [{mark}] {desc} {detail}")
+        if not ok:
+            failures.append(desc)
+
+
+def app_numerics():
+    """Runnable reduced-scale numerics on the Pallas kernels vs oracles."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.apps import cnn, knn, pagerank, stencil
+    from repro.kernels.knn.ops import knn_ref
+    from repro.kernels.stencil_dilate.ops import dilate_iters_ref
+    rows = [("app", "workload", "status", "time (s)")]
+    checks = []
+
+    t0 = time.perf_counter()
+    img = stencil.run_numeric(256, 256, iters=2)
+    ref = dilate_iters_ref(
+        __import__("jax").random.normal(
+            __import__("jax").random.PRNGKey(0), (256, 256)), 2)
+    ok = bool(jnp.allclose(img, ref))
+    rows.append(("stencil", "256x256 x2 iters (Pallas)",
+                 "allclose" if ok else "MISMATCH",
+                 f"{time.perf_counter() - t0:.2f}"))
+    checks.append(("stencil kernel matches oracle", ok, ""))
+
+    t0 = time.perf_counter()
+    rank = pagerank.run_numeric(512, 4096, iters=20)
+    ok = bool(abs(float(rank.sum()) - 1.0) < 1e-3)
+    rows.append(("pagerank", "512 nodes / 4096 edges x20",
+                 "sums-to-1" if ok else "BROKEN",
+                 f"{time.perf_counter() - t0:.2f}"))
+    checks.append(("pagerank ranks form a distribution", ok,
+                   f"sum={float(rank.sum()):.4f}"))
+
+    t0 = time.perf_counter()
+    d, i = knn.run_numeric(2048, 16, 32, 10)
+    import jax
+    rngq = jax.random.PRNGKey(0)
+    data = jax.random.normal(rngq, (2048, 16))
+    qs = jax.random.normal(jax.random.fold_in(rngq, 1), (32, 16))
+    dr, _ = knn_ref(qs, data, 10)
+    ok = bool(jnp.allclose(d, dr, atol=1e-3))
+    rows.append(("knn", "N=2048 D=16 K=10 (fused Pallas)",
+                 "allclose" if ok else "MISMATCH",
+                 f"{time.perf_counter() - t0:.2f}"))
+    checks.append(("knn kernel matches oracle", ok, ""))
+
+    t0 = time.perf_counter()
+    out = cnn.run_numeric(16, 16, 32, 32)
+    ok = bool(jnp.all(jnp.isfinite(out)))
+    rows.append(("cnn", "16x16x32->32 conv3 (systolic mm)",
+                 "finite" if ok else "NAN",
+                 f"{time.perf_counter() - t0:.2f}"))
+    checks.append(("cnn conv finite", ok, ""))
+    return "App numerics (Pallas kernels, interpret mode)", rows, checks
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip kernel-executing app numerics")
+    args = ap.parse_args()
+    failures = []
+
+    from . import paper_tables
+    sections = [
+        paper_tables.table2_resources(),
+        paper_tables.table3_speedups(),
+        paper_tables.table4_stencil_intensity(),
+        paper_tables.table7_cnn_volumes(),
+        paper_tables.table9_hierarchy(),
+        paper_tables.table10_protocols(),
+        paper_tables.section57_multinode(),
+        paper_tables.section56_overheads(),
+    ]
+    if not args.fast:
+        sections.append(app_numerics())
+    for name, rows, checks in sections:
+        print_table(name, rows)
+        print_checks(checks, failures)
+
+    # Roofline from dry-run artifacts (tolerates a not-yet-finished sweep).
+    from . import roofline_report
+    try:
+        name, rows, checks, summary = roofline_report.run()
+        print_table(name, rows)
+        print(f"  summary: {summary}")
+        print_checks(checks, failures)
+    except Exception as e:  # noqa: BLE001
+        print(f"\n(roofline report unavailable: {e})")
+
+    print(f"\n{'=' * 60}")
+    if failures:
+        print(f"BENCH RESULT: {len(failures)} check(s) FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("BENCH RESULT: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

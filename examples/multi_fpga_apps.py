@@ -1,0 +1,49 @@
+"""The paper's four benchmarks through the full TAPA-CS pipeline:
+graph → ILP partition → floorplan → pipelining → schedule simulation →
+runnable Pallas numerics at reduced scale.
+
+Run:  PYTHONPATH=src python examples/multi_fpga_apps.py
+"""
+import numpy as np
+
+from repro.apps import cnn, knn, pagerank, stencil
+from repro.core import (ALVEO_U55C, floorplan_device, fpga_ring_cluster,
+                        partition, pipeline_interconnect, simulate)
+
+
+def run_app(name, mod, build_kwargs=None, ndev=4):
+    g = mod.build_graph(ndev, **(build_kwargs or {}))
+    cl = fpga_ring_cluster(ndev)
+    p = partition(g, cl, balance_kind="LUT", balance_tol=0.8)
+    fps = {d: floorplan_device(g, p.device_tasks(d), ALVEO_U55C.resources)
+           for d in range(ndev) if p.device_tasks(d)}
+    rep = pipeline_interconnect(g, p, fps, cl)
+    freq = getattr(mod, "FREQS", {"FCS": 300e6}).get("FCS", 300e6)
+    res = simulate(g, p, cl, {d: freq for d in range(ndev)})
+    print(f"{name:9s} modules={len(g.tasks):4d} cut={len(p.cut_channels):3d} "
+          f"crossings={rep.num_crossings:3d} "
+          f"makespan={res.makespan*1e3:9.1f} ms "
+          f"speedups={ {k: round(v,2) for k,v in mod.speedup_table().items()} }")
+
+
+def numerics():
+    print("\nReduced-scale numerics on the Pallas kernels:")
+    out = stencil.run_numeric(256, 256, iters=2)
+    print(f"  stencil 256x256 x2: out range [{float(out.min()):.2f}, "
+          f"{float(out.max()):.2f}]")
+    rank = pagerank.run_numeric(512, 4096, iters=20)
+    print(f"  pagerank 512n/4096e: sum={float(rank.sum()):.4f} "
+          f"max={float(rank.max()):.5f}")
+    d, i = knn.run_numeric(2048, 16, 32, 10)
+    print(f"  knn N=2048 K=10: nearest dist mean={float(d[:,0].mean()):.3f}")
+    conv = cnn.run_numeric(16, 16, 32, 32)
+    print(f"  cnn conv3 16x16x32: out std={float(conv.std()):.3f}")
+
+
+if __name__ == "__main__":
+    print("TAPA-CS partitioning of the paper's four apps (4-FPGA ring):")
+    run_app("stencil", stencil, {"iters": 256})
+    run_app("pagerank", pagerank)
+    run_app("knn", knn)
+    run_app("cnn", cnn)
+    numerics()

@@ -1,0 +1,85 @@
+"""Quickstart: the TAPA-CS flow end-to-end on one page.
+
+1. Express a workload as a task graph (here: the paper's KNN app).
+2. Partition it across a 4-FPGA ring with the ILP partitioner (Eq. 1-2).
+3. Floorplan one device into slots (Eq. 4) + pipeline the interconnect (C5).
+4. Train a small LM for a few steps with the same machinery underneath.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.apps import knn as knn_app
+from repro.core import (ALVEO_U55C, floorplan_device, fpga_ring_cluster,
+                        partition, pipeline_interconnect, simulate,
+                        verify_balanced)
+
+
+def tapa_cs_flow():
+    print("=" * 60)
+    print("TAPA-CS flow: KNN (paper Fig. 4) on a 4-FPGA ring")
+    print("=" * 60)
+    g = knn_app.build_graph(ndev=4, n_points=4_000_000, dim=16)
+    cl = fpga_ring_cluster(4)
+    # 1) inter-FPGA ILP partition (Eq. 1-2)
+    p = partition(g, cl, balance_kind="LUT", balance_tol=0.8)
+    for d in range(4):
+        tasks = p.device_tasks(d)
+        print(f"  FPGA {d}: {len(tasks)} modules "
+              f"({', '.join(tasks[:4])}{'...' if len(tasks) > 4 else ''})")
+    print(f"  cut channels: {len(p.cut_channels)}, "
+          f"comm cost (Eq.2): {p.comm_cost:.0f}")
+    # 2) intra-FPGA floorplan (Eq. 4) for FPGA 0
+    fp = floorplan_device(g, p.device_tasks(0), ALVEO_U55C.resources,
+                          hbm_tasks=[t for t in p.device_tasks(0)
+                                     if t.startswith("dist")])
+    print(f"  FPGA0 floorplan: wirelength {fp.wirelength:.0f}, "
+          f"{fp.grid.num_slots} slots")
+    # 3) interconnect pipelining + cut-set balancing
+    rep = pipeline_interconnect(g, p, {0: fp}, cl)
+    print(f"  pipelined {rep.num_crossings} crossings "
+          f"(max {rep.max_crossing} stages); balanced: "
+          f"{verify_balanced(g, rep)}")
+    # 4) schedule simulation
+    res = simulate(g, p, cl, {d: 220e6 for d in range(4)})
+    print(f"  simulated makespan: {res.makespan * 1e3:.1f} ms")
+    print(f"  modeled speedups vs Vitis: "
+          f"{ {k: round(v, 2) for k, v in knn_app.speedup_table().items()} }")
+
+
+def tiny_lm_train():
+    print("\n" + "=" * 60)
+    print("Tiny LM training (qwen3 smoke config, 20 steps)")
+    print("=" * 60)
+    from repro.configs import get_arch
+    from repro.models import init_params, train_loss
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = get_arch("qwen3-4b").smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params)
+    opt_cfg = AdamWConfig(lr=3e-3)
+    rng = jax.random.PRNGKey(1)
+
+    @jax.jit
+    def step(params, opt_state, tokens, targets):
+        batch = {"tokens": tokens, "targets": targets,
+                 "weights": jnp.ones_like(tokens, jnp.float32)}
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(p, cfg, batch))(params)
+        params, new_opt = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, {k: new_opt[k] for k in ("mu", "nu", "count")}, loss
+
+    data = jax.random.randint(rng, (21, 4, 32), 0, cfg.vocab)
+    for i in range(20):
+        params, opt_state, loss = step(params, opt_state,
+                                       data[i], data[i + 1])
+        if i % 5 == 0:
+            print(f"  step {i}: loss {float(loss):.3f}")
+    print(f"  final loss {float(loss):.3f}")
+
+
+if __name__ == "__main__":
+    tapa_cs_flow()
+    tiny_lm_train()

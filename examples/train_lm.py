@@ -1,0 +1,64 @@
+"""End-to-end LM training with the production substrate: data pipeline,
+AdamW, checkpoint/restart with an injected failure, straggler monitor.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+(~1 min on CPU; trains the gemma2 smoke config for 60 steps, killing the
+process at step 25 and resuming from the step-20 checkpoint.)
+"""
+import logging
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import DataConfig, make_pipeline
+from repro.launch.steps import build_train_step
+from repro.models import init_params
+from repro.optim import adamw_init
+from repro.runtime import (FailureInjector, Trainer, TrainerConfig,
+                           run_with_restarts)
+
+logging.basicConfig(level=logging.INFO,
+                    format="%(name)s: %(message)s")
+
+
+def main():
+    cfg = get_arch("gemma2-27b").smoke()
+    dcfg = DataConfig(global_batch=4, seq_len=32, vocab=cfg.vocab, seed=3)
+    step_jit = jax.jit(build_train_step(cfg, None, "adamw"),
+                       donate_argnums=(0,))
+
+    def init_state():
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        return {"params": params, "opt": adamw_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def step_fn(state, batch):
+        return step_jit(state, {k: jnp.asarray(v) for k, v in batch.items()})
+
+    injector = FailureInjector(fail_at_steps=[25])
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(total_steps=60, ckpt_dir=ckpt_dir,
+                             save_interval=20, log_interval=10)
+        history = []
+
+        def attempt(n):
+            pipe = make_pipeline(dcfg)
+            tr = Trainer(tcfg, step_fn, init_state, iter(pipe),
+                         injector=injector)
+            state = tr.run()
+            history.extend(tr.metrics_history)
+            return int(np.asarray(state["step"]))
+
+        final = run_with_restarts(attempt, max_restarts=2)
+        print(f"\nfinished at step {final} after 1 injected failure "
+              f"(restart resumed from the step-20 checkpoint)")
+        print(f"loss: first={history[0]['loss']:.3f} "
+              f"last={history[-1]['loss']:.3f}")
+        assert final == 60
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+results/dryrun/*.json.  Writes results/experiments_generated.md which is
+pasted/refreshed into EXPERIMENTS.md.
+"""
+import glob
+import json
+import os
+
+GB = 2 ** 30
+
+
+def main():
+    recs = []
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if r.get("ok") is False]
+    skip = [r for r in recs if r.get("skipped")]
+
+    out = []
+    out.append("## §Dry-run\n")
+    out.append(f"Cells attempted: {len(ok) + len(fail)} "
+               f"(+{len(skip)} assignment-mandated long_500k skips); "
+               f"compiled OK: {len(ok)}; failed: {len(fail)}.\n")
+    out.append("| arch | shape | mesh | plan | lower+compile (s) | "
+               "peak GB/chip (raw) | peak GB/chip (TPU-adj) | fits 16GB |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | — | skip (full-attn @500k) |")
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | — | **FAIL**: {r.get('error','')[:60]} |")
+            continue
+        m = r["memory"]
+        adj = m.get("tpu_adjusted_peak_bytes", m["peak_bytes"])
+        plan = r["plan"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {plan['pod_strategy']}/{plan['optimizer']} "
+            f"| {r.get('lower_s',0)}+{r.get('compile_s',0)} "
+            f"| {m['peak_bytes']/GB:.1f} | {adj/GB:.1f} "
+            f"| {'yes' if adj <= 16*GB else 'NO'} |")
+
+    out.append("\n## §Roofline\n")
+    out.append("Terms per chip per step (seconds), TPU v5e constants "
+               "(197 TF bf16, 819 GB/s HBM, 50 GB/s ICI, 6.25 GB/s DCN). "
+               "Collective bytes are trip-count-corrected and TPU-payload-"
+               "adjusted (DESIGN.md §6).\n")
+    out.append("| arch | shape | mesh | compute_s | memory_s | collective_s "
+               "| dominant | bound_s | roofline frac | 6N·D/HLO |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rf = r["roofline"]
+        frac = rf["compute_s"] / rf["bound_s"] if rf["bound_s"] else 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3g} | {rf['memory_s']:.3g} "
+            f"| {rf['collective_s']:.3g} | {rf['dominant']} "
+            f"| {rf['bound_s']:.3g} | {frac:.2f} "
+            f"| {rf['model_flops_ratio']:.2f} |")
+
+    doms = {}
+    fracs = []
+    for r in ok:
+        rf = r["roofline"]
+        doms[rf["dominant"]] = doms.get(rf["dominant"], 0) + 1
+        if rf["bound_s"]:
+            fracs.append(rf["compute_s"] / rf["bound_s"])
+    out.append(f"\nDominant-term histogram: {doms}.  "
+               f"Mean roofline fraction (compute/bound): "
+               f"{sum(fracs)/max(len(fracs),1):.2f}; "
+               f"best {max(fracs, default=0):.2f}, "
+               f"worst {min(fracs, default=0):.3f}.\n")
+
+    with open("results/experiments_generated.md", "w") as f:
+        f.write("\n".join(out))
+    print(f"wrote results/experiments_generated.md "
+          f"({len(ok)} ok, {len(fail)} fail, {len(skip)} skip)")
+
+
+if __name__ == "__main__":
+    main()

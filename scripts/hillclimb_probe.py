@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb probe: lower one cell, print the top collectives by effective
+wire bytes (trip-count-corrected) with op attribution, plus roofline terms.
+
+  PYTHONPATH=src python scripts/hillclimb_probe.py <arch> <shape> [multi]
+"""
+import sys
+
+from repro.configs import get_arch, input_specs
+from repro.configs.base import SHAPES
+from repro.launch import hlo_analysis, steps
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.plan import make_plan
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+    mb_override = int(sys.argv[4]) if len(sys.argv) > 4 else None
+    cfg = get_arch(arch).full()
+    mesh = make_production_mesh(multi_pod=multi)
+    cell = SHAPES[shape]
+    plan = make_plan(arch, cfg, shape,
+                     num_pods=mesh.shape.get("pod", 1))
+    specs = input_specs(cfg, shape)
+    mb = mb_override or plan.microbatches
+    if cell.kind == "train":
+        lowered = steps.lower_train(cfg, mesh, specs,
+                                    optimizer=plan.optimizer,
+                                    microbatches=mb)
+    elif cell.kind == "prefill":
+        lowered = steps.lower_prefill(cfg, mesh, specs)
+    else:
+        lowered = steps.lower_serve(cfg, mesh, specs)
+    comp = lowered.compile()
+    txt = comp.as_text()
+    colls = hlo_analysis.parse_collectives(
+        txt, num_superblocks=cfg.num_superblocks, seq_len=cell.seq_len,
+        vocab=cfg.vocab, chips_per_pod=256,
+        microbatches=mb if cell.kind == "train" else 1)
+    agg = hlo_analysis.collective_bytes(colls)
+    print(f"total ici={agg['ici']/2**30:.2f} GiB "
+          f"(tpu-adj {agg['ici_tpu_adj']/2**30:.2f}) "
+          f"dcn={agg['dcn']/2**30:.2f} GiB "
+          f"(tpu-adj {agg['dcn_tpu_adj']/2**30:.2f}) over {len(colls)} ops")
+    ranked = sorted(colls, key=lambda o: -o.bytes_per_exec * o.trip_mult *
+                    (2 if o.kind == "all-reduce" else 1))
+    for o in ranked[:14]:
+        eff = o.bytes_per_exec * o.trip_mult * (
+            2 if o.kind == "all-reduce" else 1)
+        print(f"  {eff/2**30:7.2f} GiB  {o.kind:18s} {o.dtype}"
+              f"{list(o.shape)} x{o.trip_mult:.0f} depth={o.while_depth} "
+              f"dcn={o.is_dcn}")
+        # op_name metadata tail for attribution
+        import re
+        m = re.search(r'op_name="([^"]+)"', o.line)
+        if m:
+            print(f"           └ {m.group(1)[-110:]}")
+    ma = hlo_analysis.memory_summary(comp)
+    print(f"peak={ma['peak_bytes']/2**30:.2f} GiB "
+          f"(args {ma['argument_bytes']/2**30:.2f})")
+
+
+if __name__ == "__main__":
+    main()

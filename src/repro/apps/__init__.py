@@ -1,0 +1,10 @@
+"""The paper's four benchmark applications (§5): Stencil (Dilate), PageRank,
+KNN, systolic CNN — as (a) TaskGraphs consumed by the real partitioner,
+(b) mechanistic latency models reproducing Table 3 / §5.7, and (c) runnable
+JAX numerics on the Pallas kernels.
+"""
+from . import cnn, knn, pagerank, stencil
+
+APPS = {"stencil": stencil, "pagerank": pagerank, "knn": knn, "cnn": cnn}
+
+__all__ = ["APPS", "stencil", "pagerank", "knn", "cnn"]

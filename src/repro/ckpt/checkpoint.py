@@ -1,0 +1,150 @@
+"""Sharded, atomic, async checkpointing with reshard-on-restore.
+
+Layout:  <dir>/step_<N>.tmp/ → leaf files `<idx>.npy` + manifest.json,
+atomically renamed to step_<N>/ when complete (a crash mid-write never
+corrupts the latest checkpoint — the restart loop only sees published dirs).
+
+Resharding: leaves are stored unsharded (gathered); on restore they are
+placed under the *current* mesh's shardings, so a job restarted on a
+different device count (elastic re-scale) loads cleanly.  At real scale
+per-shard writes would stream via per-host tensorstore — the manifest format
+is designed so that swap is local to this file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    blocking: bool = True) -> threading.Thread:
+    """Write tree to directory/step_<step>; returns writer thread."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    # Device→host transfer happens on the caller thread (cheap: async copy),
+    # serialization runs in the background writer.
+    host_flat = {k: np.asarray(v) for k, v in flat.items()}
+
+    def _write():
+        manifest = {}
+        for i, (key, arr) in enumerate(sorted(host_flat.items())):
+            fname = f"{i}.npy"
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":      # npy has no native bf16: view u16
+                np.save(os.path.join(tmp, fname), arr.view(np.uint16))
+            else:
+                np.save(os.path.join(tmp, fname), arr)
+            manifest[key] = {"file": fname, "shape": list(arr.shape),
+                             "dtype": dtype}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, like_tree, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of ``like_tree``; ``shardings`` optionally
+    a matching pytree of NamedShardings for reshard-on-restore."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    flat_paths = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (kpath, like), shard in zip(flat_paths[0], shard_leaves):
+        key = jax.tree_util.keystr(kpath)
+        meta = manifest[key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if shard is not None:
+            arr = jax.device_put(arr, shard)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; async writes; restart discovery."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 save_interval: int = 100):
+        self.directory = directory
+        self.keep = keep
+        self.save_interval = save_interval
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_interval == 0
+
+    def save(self, step: int, tree, blocking: bool = False):
+        if self._pending is not None:
+            self._pending.join()
+        self._pending = save_checkpoint(self.directory, step, tree,
+                                        blocking=blocking)
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore(self, like_tree, shardings=None):
+        return load_checkpoint(self.directory, like_tree,
+                               shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

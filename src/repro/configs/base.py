@@ -1,0 +1,103 @@
+"""Config registry + the four assigned input-shape cells.
+
+Every architecture file exposes:
+    full()  -> ModelConfig          (exact published dims)
+    smoke() -> ModelConfig          (reduced same-family config for CPU tests)
+plus metadata: FAMILY, SUPPORTED_SHAPES (long_500k only for sub-quadratic).
+
+`input_specs(cfg, shape)` builds the ShapeDtypeStruct stand-ins for the
+dry-run (weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def _frontend_len(cfg: ModelConfig) -> int:
+    return cfg.frontend_tokens if cfg.frontend == "vision" else 0
+
+
+def _enc_len(cfg: ModelConfig, seq: int) -> int:
+    # Audio enc-dec: encoder consumes seq//4 frame embeddings (frontend stub
+    # downsampling factor; DESIGN.md §4).
+    return seq // 4 if cfg.arch == "encdec" else 0
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, object]:
+    """ShapeDtypeStructs for one (arch × shape) cell.
+
+    train/prefill: token batch (+ frontend/src embeddings).
+    decode: single-token batch + cache + position.
+    """
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    P = _frontend_len(cfg)
+    E = _enc_len(cfg, S)
+    f32, i32 = jnp.float32, jnp.int32
+    if cell.kind in ("train", "prefill"):
+        specs: Dict[str, object] = {
+            "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+        }
+        if cell.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["weights"] = jax.ShapeDtypeStruct((B, S), f32)
+        if P:
+            specs["frontend"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                     cfg.dtype)
+        if E:
+            specs["src"] = jax.ShapeDtypeStruct((B, E, cfg.d_model),
+                                                cfg.dtype)
+        return specs
+    # decode: one new token against a cache of size seq_len.
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    if E:
+        specs["enc_out"] = jax.ShapeDtypeStruct((B, E, cfg.d_model),
+                                                cfg.dtype)
+    return specs
+
+
+# Registry filled by __init__.
+ARCHS: Dict[str, object] = {}
+
+
+def register(name: str, module) -> None:
+    ARCHS[name] = module
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def supported_shapes(module) -> Tuple[str, ...]:
+    return getattr(module, "SUPPORTED_SHAPES",
+                   ("train_4k", "prefill_32k", "decode_32k"))

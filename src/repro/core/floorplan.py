@@ -1,0 +1,261 @@
+"""Intra-device floorplanning — paper §4.5 (C4), Eq. 4.
+
+Each device is presented as a grid of slots (Alveo U55C: 2 columns × 3 rows
+bounded by hard-IP columns; TPU pod: sub-rectangles of the 2-D ICI torus).
+Tasks assigned to a device are placed into slots minimizing
+
+    Σ_{e_ij} e_ij.width × (|v_i.row − v_j.row| + |v_i.col − v_j.col|)   (Eq. 4)
+
+under per-slot capacity, by recursive two-way ILP partitioning (row cuts then
+column cuts) exactly as the paper describes ("we continue such a two-way
+ILP-based partitioning scheme until we divide each FPGA into eight grids").
+
+The paper's "HBM channel binding exploration" maps on TPU to choosing which
+mesh axis each HBM-resident tensor family is sharded over — emitted here as
+``slot_affinity`` hints consumed by launch/shardings.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import TaskGraph
+from .ilp import ILPError, Model, SolveStats, kl_refine
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotGrid:
+    """Slot geometry of one device."""
+
+    rows: int
+    cols: int
+    # Per-slot capacity scale (1.0 = full share).  Models hard IPs / static
+    # regions consuming part of a slot (paper §2: HBM controllers pinned to
+    # the bottom die of the U55C).
+    slot_scale: Optional[np.ndarray] = None
+    # Slots adjacent to HBM channels (bottom row on U55C).
+    hbm_rows: Tuple[int, ...] = (0,)
+
+    @property
+    def num_slots(self) -> int:
+        return self.rows * self.cols
+
+    def coords(self, s: int) -> Tuple[int, int]:
+        return divmod(s, self.cols)
+
+    def slot_id(self, r: int, c: int) -> int:
+        return r * self.cols + c
+
+    def dist(self, s1: int, s2: int) -> int:
+        (r1, c1), (r2, c2) = self.coords(s1), self.coords(s2)
+        return abs(r1 - r2) + abs(c1 - c2)
+
+    def scale(self, s: int) -> float:
+        if self.slot_scale is None:
+            return 1.0
+        return float(self.slot_scale.flat[s])
+
+
+# U55C is presented "as a grid with 6 slots divided into two columns and 3
+# rows" (§4.5); recursive bisection continues to 8 grids for larger parts.
+U55C_GRID = SlotGrid(rows=3, cols=2)
+# TPU pod: a 16×16 ICI torus viewed as 4×2 = 8 coarse slots ("divide each
+# FPGA into eight grids").
+TPU_POD_GRID = SlotGrid(rows=4, cols=2, hbm_rows=(0, 1, 2, 3))
+
+
+@dataclasses.dataclass
+class Floorplan:
+    slot_of: Dict[str, int]              # task -> slot id
+    grid: SlotGrid
+    wirelength: float                    # Eq. 4 objective
+    usage: np.ndarray                    # [slot, kind]
+    kinds: Tuple[str, ...]
+    stats: SolveStats
+    threshold_used: float = 0.70
+    congested: bool = False              # fed to FreqModel.estimate
+
+    def max_slot_util(self, capacity: Dict[str, float]) -> float:
+        """Worst slot utilization fraction across kinds (vs full slot)."""
+        out = 0.0
+        nslots = self.grid.num_slots
+        for ki, k in enumerate(self.kinds):
+            cap = capacity[k] / nslots
+            if cap > 0:
+                out = max(out, float(self.usage[:, ki].max()) / cap)
+        return out
+
+    def slot_tasks(self, s: int) -> List[str]:
+        return [t for t, ss in self.slot_of.items() if ss == s]
+
+
+def _areas(graph: TaskGraph, tasks: Sequence[str], kinds) -> Dict[str, np.ndarray]:
+    return {v: np.array([graph.tasks[v].area[k] for k in kinds], dtype=float)
+            for v in tasks}
+
+
+def floorplan_device(graph: TaskGraph, tasks: Sequence[str],
+                     capacity: Dict[str, float], *,
+                     grid: SlotGrid = U55C_GRID,
+                     threshold: float = 0.70,
+                     hbm_tasks: Sequence[str] = (),
+                     time_limit: float = 30.0,
+                     strict: bool = False) -> Floorplan:
+    """Floorplan the ``tasks`` resident on one device into ``grid`` slots.
+
+    capacity: whole-device resources (paper Table 2); each slot gets
+        capacity/num_slots × slot_scale × threshold.
+    hbm_tasks: tasks that access HBM — pinned (softly) to HBM-adjacent rows,
+        the paper's channel-binding consideration.
+
+    Slot-level bin packing can be infeasible even when device-level Eq. 1
+    holds (slot quantization wastes capacity).  Real CAD doesn't crash — it
+    produces a congested placement with degraded fmax.  We model that:
+    escalate the threshold (0.85, 0.95, 1.1), and as a last resort place
+    greedily, flagging ``congested`` so FreqModel derates the clock.
+    ``strict=True`` restores the hard-failure behaviour for tests.
+    """
+    t0 = time.perf_counter()
+    tasks = list(tasks)
+    kinds = tuple(capacity.keys())
+    nslots = grid.num_slots
+    in_set = set(tasks)
+    edges = [(c.src, c.dst, float(c.width_bits)) for c in graph.channels
+             if c.src in in_set and c.dst in in_set]
+    pair = np.array([[grid.dist(a, b) for b in range(nslots)]
+                     for a in range(nslots)], dtype=float)
+
+    thresholds = [threshold] if strict else [threshold, 0.85, 0.95, 1.1]
+    last_err: Optional[Exception] = None
+    for ti, th in enumerate(thresholds):
+        areas = _areas(graph, tasks, kinds)
+        caps = np.array([[capacity[k] / nslots * grid.scale(s) * th
+                          for k in kinds] for s in range(nslots)])
+        # A module larger than one slot spans adjacent slots ("a single die
+        # can contain any number of modules, and modules spanning across
+        # multiple dies are pipelined sufficiently" — paper §6.2).
+        slot_min = caps.min(axis=0)
+        for v in tasks:
+            areas[v] = np.minimum(areas[v], slot_min * 0.95)
+        try:
+            if len(tasks) * nslots <= 2000:
+                slot_of, method = _exact_slot_ilp(
+                    tasks, edges, areas, kinds, grid, caps, hbm_tasks,
+                    time_limit)
+            else:
+                slot_of, method = _recursive_slots(
+                    tasks, edges, areas, kinds, grid, caps, hbm_tasks,
+                    time_limit)
+        except ILPError as e:
+            last_err = e
+            continue
+        slot_of = kl_refine(slot_of, edges, pair, areas, caps)
+        usage = np.zeros((nslots, len(kinds)))
+        for v, s in slot_of.items():
+            usage[s] += areas[v]
+        if np.any(usage > caps + 1e-6):
+            last_err = ILPError("refinement violated slot capacity")
+            continue
+        wl = sum(w * grid.dist(slot_of[u], slot_of[v]) for u, v, w in edges)
+        stats = SolveStats(graph.name, len(tasks), nslots,
+                           time.perf_counter() - t0, wl, method)
+        return Floorplan(slot_of, grid, wl, usage, kinds, stats,
+                         threshold_used=th, congested=ti > 0)
+    if strict:
+        raise last_err or ILPError("floorplan infeasible")
+    # Greedy congested fallback: least-loaded-slot placement.
+    areas = _areas(graph, tasks, kinds)
+    norm = np.array([max(capacity[k] / nslots, 1e-9) for k in kinds])
+    usage = np.zeros((nslots, len(kinds)))
+    slot_of = {}
+    for v in sorted(tasks, key=lambda t: -float((areas[t] / norm).max())):
+        s = int(np.argmin((usage / norm).max(axis=1)))
+        slot_of[v] = s
+        usage[s] += areas[v]
+    slot_of = kl_refine(slot_of, edges, pair, areas,
+                        np.tile(norm * 10.0, (nslots, 1)))
+    usage = np.zeros((nslots, len(kinds)))
+    for v, s in slot_of.items():
+        usage[s] += areas[v]
+    wl = sum(w * grid.dist(slot_of[u], slot_of[v]) for u, v, w in edges)
+    stats = SolveStats(graph.name, len(tasks), nslots,
+                       time.perf_counter() - t0, wl, "greedy-congested")
+    return Floorplan(slot_of, grid, wl, usage, kinds, stats,
+                     threshold_used=float("inf"), congested=True)
+
+
+def _exact_slot_ilp(tasks, edges, areas, kinds, grid: SlotGrid, caps,
+                    hbm_tasks, time_limit):
+    nslots = grid.num_slots
+    m = Model("floorplan")
+    x: Dict[Tuple[str, int], int] = {}
+    hbm_slots = {grid.slot_id(r, c)
+                 for r in grid.hbm_rows for c in range(grid.cols)}
+    hbm_set = set(hbm_tasks)
+    for v in tasks:
+        for s in range(nslots):
+            # Soft HBM binding: tiny objective bonus for HBM tasks in HBM rows.
+            pen = 0.0
+            if v in hbm_set and s not in hbm_slots:
+                pen = 1e-3 * sum(areas[v]) + 1.0
+            x[v, s] = m.add_binary(obj=pen)
+        m.add_eq({x[v, s]: 1.0 for s in range(nslots)}, 1.0)
+    for s in range(nslots):
+        for ki in range(len(kinds)):
+            coeffs = {x[v, s]: areas[v][ki] for v in tasks if areas[v][ki]}
+            if coeffs:
+                m.add_le(coeffs, caps[s, ki])
+    for (u, v, w) in edges:
+        for a in range(nslots):
+            for b in range(nslots):
+                d = grid.dist(a, b)
+                if a == b or d == 0:
+                    continue
+                var = m.add_var(0.0, 1.0, integer=False, obj=w * d)
+                m.add_ge({var: 1.0, x[u, a]: -1.0, x[v, b]: -1.0}, -1.0)
+    sol = m.solve(time_limit=time_limit)
+    out = {v: int(np.argmax([sol[x[v, s]] for s in range(nslots)]))
+           for v in tasks}
+    return out, "milp-exact"
+
+
+def _recursive_slots(tasks, edges, areas, kinds, grid: SlotGrid, caps,
+                     hbm_tasks, time_limit):
+    """Recursive bisection: cut rows, then columns (paper's two-way scheme)."""
+
+    def bisect(tset: List[str], slots: List[int]) -> Dict[str, int]:
+        if len(slots) == 1:
+            return {v: slots[0] for v in tset}
+        # Split slots into two spatially-contiguous halves.
+        coords = sorted(slots, key=lambda s: grid.coords(s))
+        half = len(coords) // 2
+        left_s, right_s = coords[:half], coords[half:]
+        m = Model("slot-bisect")
+        side = {v: m.add_binary() for v in tset}
+        in_set = set(tset)
+        cap_l = caps[left_s].sum(axis=0)
+        cap_r = caps[right_s].sum(axis=0)
+        for ki in range(len(kinds)):
+            tot = sum(areas[v][ki] for v in tset)
+            coeffs = {side[v]: areas[v][ki] for v in tset if areas[v][ki]}
+            if coeffs:
+                m.add_le(coeffs, cap_r[ki])
+                m.add_ge(coeffs, tot - cap_l[ki])
+        for (u, v, w) in edges:
+            if u in in_set and v in in_set:
+                y = m.add_var(0.0, 1.0, integer=False, obj=w)
+                m.add_ge({y: 1.0, side[u]: -1.0, side[v]: 1.0}, 0.0)
+                m.add_ge({y: 1.0, side[u]: 1.0, side[v]: -1.0}, 0.0)
+        sol = m.solve(time_limit=time_limit)
+        left_t = [v for v in tset if sol[side[v]] < 0.5]
+        right_t = [v for v in tset if sol[side[v]] >= 0.5]
+        out = {}
+        out.update(bisect(left_t, left_s))
+        out.update(bisect(right_t, right_s))
+        return out
+
+    return bisect(list(tasks), list(range(grid.num_slots))), \
+        "milp-recursive-bisect"

@@ -1,0 +1,170 @@
+"""Thin ILP layer over scipy.optimize.milp (HiGHS branch-and-cut).
+
+The paper solves its floorplanning formulations with Python-MIP or Gurobi
+(§5).  Offline we use HiGHS via scipy — a real exact MILP solver — wrapped in
+a tiny incremental model builder, plus a Kernighan–Lin style refinement
+heuristic used as a fast fallback / polish for very large graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy import optimize as sopt
+from scipy import sparse as ssp
+
+
+class ILPError(RuntimeError):
+    pass
+
+
+class Model:
+    """Incremental 0/1-or-continuous LP/ILP model."""
+
+    def __init__(self, name: str = "ilp"):
+        self.name = name
+        self._num_vars = 0
+        self._obj: Dict[int, float] = {}
+        self._integrality: List[int] = []
+        self._lb: List[float] = []
+        self._ub: List[float] = []
+        # constraint rows: (coeffs {var: c}, lo, hi)
+        self._rows: List[Tuple[Dict[int, float], float, float]] = []
+
+    # -- variables ---------------------------------------------------------
+    def add_var(self, lb: float = 0.0, ub: float = 1.0,
+                integer: bool = True, obj: float = 0.0) -> int:
+        idx = self._num_vars
+        self._num_vars += 1
+        self._integrality.append(1 if integer else 0)
+        self._lb.append(lb)
+        self._ub.append(ub)
+        if obj:
+            self._obj[idx] = obj
+        return idx
+
+    def add_binary(self, obj: float = 0.0) -> int:
+        return self.add_var(0.0, 1.0, True, obj)
+
+    def set_obj(self, var: int, coeff: float) -> None:
+        self._obj[var] = coeff
+
+    # -- constraints ---------------------------------------------------------
+    def add_constraint(self, coeffs: Dict[int, float],
+                       lo: float = -np.inf, hi: float = np.inf) -> None:
+        self._rows.append((dict(coeffs), lo, hi))
+
+    def add_eq(self, coeffs: Dict[int, float], rhs: float) -> None:
+        self.add_constraint(coeffs, rhs, rhs)
+
+    def add_le(self, coeffs: Dict[int, float], rhs: float) -> None:
+        self.add_constraint(coeffs, -np.inf, rhs)
+
+    def add_ge(self, coeffs: Dict[int, float], rhs: float) -> None:
+        self.add_constraint(coeffs, rhs, np.inf)
+
+    # -- solve ---------------------------------------------------------------
+    def solve(self, time_limit: Optional[float] = None,
+              mip_rel_gap: float = 1e-6) -> np.ndarray:
+        n = self._num_vars
+        c = np.zeros(n)
+        for i, v in self._obj.items():
+            c[i] = v
+        if self._rows:
+            data, rows, cols = [], [], []
+            lo = np.empty(len(self._rows))
+            hi = np.empty(len(self._rows))
+            for r, (coeffs, l, h) in enumerate(self._rows):
+                lo[r], hi[r] = l, h
+                for v, cf in coeffs.items():
+                    rows.append(r)
+                    cols.append(v)
+                    data.append(cf)
+            A = ssp.csr_matrix((data, (rows, cols)),
+                               shape=(len(self._rows), n))
+            constraints = sopt.LinearConstraint(A, lo, hi)
+        else:
+            constraints = ()
+        opts: Dict[str, object] = {"mip_rel_gap": mip_rel_gap}
+        if time_limit is not None:
+            opts["time_limit"] = time_limit
+        res = sopt.milp(
+            c=c,
+            constraints=constraints,
+            integrality=np.array(self._integrality),
+            bounds=sopt.Bounds(np.array(self._lb), np.array(self._ub)),
+            options=opts,
+        )
+        if not res.success or res.x is None:
+            raise ILPError(f"ILP infeasible/failed: {res.message}")
+        return res.x
+
+
+# ---------------------------------------------------------------------------
+# Kernighan–Lin style refinement for k-way assignments (fallback / polish).
+# ---------------------------------------------------------------------------
+
+def kl_refine(assign: Dict[str, int],
+              edges: Sequence[Tuple[str, str, float]],
+              pair_cost: "np.ndarray",
+              area: Dict[str, np.ndarray],
+              caps: np.ndarray,
+              max_passes: int = 8) -> Dict[str, int]:
+    """Greedy single-move refinement.
+
+    assign: node -> device; edges: (u, v, weight); pair_cost[d1, d2]:
+    dist×λ between devices; area[node]: resource vector; caps[d, k]:
+    remaining-capacity-aware limits (absolute, already scaled by T).
+    """
+    assign = dict(assign)
+    ndev = pair_cost.shape[0]
+    nodes = list(assign.keys())
+    # per-device usage
+    nk = next(iter(area.values())).shape[0] if area else 0
+    usage = np.zeros((ndev, nk))
+    for v, d in assign.items():
+        usage[d] += area[v]
+    adj: Dict[str, List[Tuple[str, float]]] = {n: [] for n in nodes}
+    for u, v, w in edges:
+        adj[u].append((v, w))
+        adj[v].append((u, w))
+
+    def node_cost(v: str, d: int) -> float:
+        return sum(w * pair_cost[d, assign[o]] for o, w in adj[v] if o != v)
+
+    for _ in range(max_passes):
+        improved = False
+        for v in nodes:
+            d0 = assign[v]
+            base = node_cost(v, d0)
+            best_d, best_gain = d0, 0.0
+            for d in range(ndev):
+                if d == d0:
+                    continue
+                if nk and np.any(usage[d] + area[v] > caps[d] + 1e-9):
+                    continue
+                gain = base - node_cost(v, d)
+                if gain > best_gain + 1e-12:
+                    best_gain, best_d = gain, d
+            if best_d != d0:
+                usage[d0] -= area[v]
+                usage[best_d] += area[v]
+                assign[v] = best_d
+                improved = True
+        if not improved:
+            break
+    return assign
+
+
+@dataclasses.dataclass
+class SolveStats:
+    """Timing record — reproduces the paper's §5.6 overhead table."""
+
+    name: str
+    num_tasks: int
+    num_devices: int
+    wall_time_s: float
+    objective: float
+    method: str

@@ -1,0 +1,280 @@
+"""Inter-device ILP partitioner — paper §4.3 (C2), Eq. 1–2.
+
+Assign every task v to a device F_d minimizing
+
+    Σ_{e_ij ∈ E}  e_ij.width × dist(F_i, F_j) × λ            (Eq. 2)
+
+subject to per-device, per-resource-kind capacity (Eq. 1):
+
+    Σ_{v on d} v_area[k]  <  T × capacity[d, k]
+
+plus an optional compute-balance band (the paper's "compute-load between the
+multiple FPGAs is balanced").  Exact solution via HiGHS branch-and-cut with
+the standard product linearization; recursive two-way partitioning (the
+paper's intra-FPGA scheme, §4.5) for large instances; KL polish either way.
+
+The partitioner deliberately does NOT always return the min-cut: a module is
+moved off-chip when keeping it co-located would violate the congestion
+threshold (paper §4.3 last paragraph) — that is exactly the Eq. 1 constraint
+binding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import TaskGraph, Channel
+from .ilp import ILPError, Model, SolveStats, kl_refine
+from .topology import Cluster
+
+
+@dataclasses.dataclass
+class Partition:
+    """Result of inter-device partitioning."""
+
+    assignment: Dict[str, int]            # task -> device id
+    comm_cost: float                      # Eq. 2 objective value
+    cut_channels: List[Channel]           # channels crossing devices
+    usage: np.ndarray                     # [device, kind] resource usage
+    kinds: Tuple[str, ...]
+    stats: SolveStats
+
+    def device_tasks(self, d: int) -> List[str]:
+        return [t for t, dd in self.assignment.items() if dd == d]
+
+    def num_devices(self) -> int:
+        return int(max(self.assignment.values())) + 1 if self.assignment else 0
+
+
+def _pair_cost_matrix(cluster: Cluster) -> np.ndarray:
+    n = cluster.num_devices
+    m = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            m[i, j] = cluster.comm_cost(i, j, width_bits=1.0)
+    return m
+
+
+def _areas(graph: TaskGraph, kinds: Sequence[str]) -> Dict[str, np.ndarray]:
+    return {name: np.array([t.area[k] for k in kinds], dtype=float)
+            for name, t in graph.tasks.items()}
+
+
+def _objective(graph: TaskGraph, assign: Dict[str, int],
+               cluster: Cluster) -> float:
+    return sum(cluster.comm_cost(assign[c.src], assign[c.dst], c.width_bits)
+               for c in graph.channels)
+
+
+def _usage(graph: TaskGraph, assign: Dict[str, int], kinds: Sequence[str],
+           ndev: int) -> np.ndarray:
+    u = np.zeros((ndev, len(kinds)))
+    areas = _areas(graph, kinds)
+    for v, d in assign.items():
+        u[d] += areas[v]
+    return u
+
+
+def _check_capacity(usage: np.ndarray, caps: np.ndarray) -> bool:
+    return bool(np.all(usage <= caps + 1e-6))
+
+
+def partition(graph: TaskGraph, cluster: Cluster, *,
+              balance_kind: Optional[str] = None,
+              balance_tol: float = 0.35,
+              pins: Optional[Dict[str, int]] = None,
+              exact_limit: int = 20000,
+              time_limit: float = 60.0) -> Partition:
+    """Partition ``graph`` onto ``cluster`` (Eq. 1–2).
+
+    balance_kind: resource kind whose per-device totals must stay within
+        ±balance_tol of the mean (compute-load balancing).
+    pins: task -> device pre-assignments (e.g. HBM-reading sources on the
+        device owning the data, paper Fig. 4's blue modules).
+    exact_limit: max (#edges × #device-pairs) for the exact product
+        formulation; larger instances use recursive bisection + KL polish.
+    """
+    graph.validate()
+    t0 = time.perf_counter()
+    ndev = cluster.num_devices
+    kinds = graph.resource_kinds()
+    pins = pins or {}
+
+    if ndev == 1:
+        assign = {v: 0 for v in graph.tasks}
+        usage = _usage(graph, assign, kinds, 1)
+        stats = SolveStats(graph.name, len(graph.tasks), 1,
+                           time.perf_counter() - t0, 0.0, "trivial")
+        return Partition(assign, 0.0, [], usage, kinds, stats)
+
+    npairs = ndev * (ndev - 1) // 2
+    problem_size = max(1, len(graph.channels)) * npairs
+    if problem_size <= exact_limit:
+        assign, method = _solve_exact(graph, cluster, kinds, balance_kind,
+                                      balance_tol, pins, time_limit)
+    else:
+        assign, method = _solve_recursive(graph, cluster, kinds, balance_kind,
+                                          balance_tol, pins, time_limit)
+
+    # KL polish (never worsens comm; respects capacity).  Skipped when a
+    # balance band is active — single-move refinement is blind to it and
+    # would re-merge everything onto one device.
+    caps = np.array([[cluster.capacity(k) for k in kinds]
+                     for _ in range(ndev)])
+    if balance_kind is None:
+        pair_cost = _pair_cost_matrix(cluster)
+        edges = [(c.src, c.dst, float(c.width_bits)) for c in graph.channels]
+        areas = _areas(graph, kinds)
+        pinned = set(pins)
+        movable_assign = kl_refine(
+            {v: d for v, d in assign.items() if v not in pinned},
+            [(u, v, w) for (u, v, w) in edges
+             if u not in pinned and v not in pinned],
+            pair_cost, areas, caps)
+        assign.update(movable_assign)
+
+    usage = _usage(graph, assign, kinds, ndev)
+    if not _check_capacity(usage, caps):
+        raise ILPError("partition violates Eq.1 capacity after refinement")
+    obj = _objective(graph, assign, cluster)
+    cut = [c for c in graph.channels if assign[c.src] != assign[c.dst]]
+    stats = SolveStats(graph.name, len(graph.tasks), ndev,
+                       time.perf_counter() - t0, obj, method)
+    return Partition(assign, obj, cut, usage, kinds, stats)
+
+
+# ---------------------------------------------------------------------------
+# Exact product-linearized MILP.
+# ---------------------------------------------------------------------------
+
+def _solve_exact(graph: TaskGraph, cluster: Cluster, kinds, balance_kind,
+                 balance_tol, pins, time_limit) -> Tuple[Dict[str, int], str]:
+    ndev = cluster.num_devices
+    nodes = graph.task_names()
+    areas = _areas(graph, kinds)
+    pair_cost = _pair_cost_matrix(cluster)
+    m = Model(f"partition[{graph.name}]")
+
+    x: Dict[Tuple[str, int], int] = {}
+    for v in nodes:
+        for d in range(ndev):
+            x[v, d] = m.add_binary()
+        m.add_eq({x[v, d]: 1.0 for d in range(ndev)}, 1.0)
+    for v, d in pins.items():
+        m.add_eq({x[v, d]: 1.0}, 1.0)
+
+    # Eq. 1 capacity rows.
+    for d in range(ndev):
+        for ki, k in enumerate(kinds):
+            coeffs = {x[v, d]: areas[v][ki] for v in nodes if areas[v][ki]}
+            if coeffs:
+                m.add_le(coeffs, cluster.capacity(k))
+
+    # Optional compute-balance band.
+    if balance_kind is not None and balance_kind in kinds:
+        ki = kinds.index(balance_kind)
+        total = sum(areas[v][ki] for v in nodes)
+        mean = total / ndev
+        for d in range(ndev):
+            coeffs = {x[v, d]: areas[v][ki] for v in nodes if areas[v][ki]}
+            m.add_constraint(coeffs, (1 - balance_tol) * mean,
+                             (1 + balance_tol) * mean)
+
+    # Eq. 2 objective via pair variables w[e,a,b] >= x[src,a]+x[dst,b]-1.
+    for e_idx, c in enumerate(graph.channels):
+        for a in range(ndev):
+            for b in range(ndev):
+                if a == b:
+                    continue
+                cost = c.width_bits * pair_cost[a, b]
+                if cost == 0:
+                    continue
+                w = m.add_var(0.0, 1.0, integer=False, obj=cost)
+                m.add_ge({w: 1.0, x[c.src, a]: -1.0, x[c.dst, b]: -1.0}, -1.0)
+
+    sol = m.solve(time_limit=time_limit)
+    assign = {}
+    for v in nodes:
+        d = int(np.argmax([sol[x[v, d]] for d in range(ndev)]))
+        assign[v] = d
+    return assign, "milp-exact"
+
+
+# ---------------------------------------------------------------------------
+# Recursive two-way partitioning (paper §4.5 scheme applied inter-device).
+# ---------------------------------------------------------------------------
+
+def _solve_recursive(graph: TaskGraph, cluster: Cluster, kinds, balance_kind,
+                     balance_tol, pins,
+                     time_limit) -> Tuple[Dict[str, int], str]:
+    ndev = cluster.num_devices
+    nodes = graph.task_names()
+    areas = _areas(graph, kinds)
+
+    def bisect(node_set: List[str], devs: List[int]) -> Dict[str, int]:
+        if len(devs) == 1:
+            return {v: devs[0] for v in node_set}
+        half = len(devs) // 2
+        left_devs, right_devs = devs[:half], devs[half:]
+        assign = _two_way_ilp(graph, node_set, left_devs, right_devs, areas,
+                              kinds, cluster, balance_kind, balance_tol, pins,
+                              time_limit)
+        left = [v for v in node_set if assign[v] == 0]
+        right = [v for v in node_set if assign[v] == 1]
+        out = {}
+        out.update(bisect(left, left_devs))
+        out.update(bisect(right, right_devs))
+        return out
+
+    return bisect(nodes, list(range(ndev))), "milp-recursive-bisect"
+
+
+def _two_way_ilp(graph, node_set, left_devs, right_devs, areas, kinds,
+                 cluster, balance_kind, balance_tol, pins,
+                 time_limit) -> Dict[str, int]:
+    node_in = set(node_set)
+    m = Model("bisect")
+    side: Dict[str, int] = {}
+    for v in node_set:
+        side[v] = m.add_binary()  # 0 = left, 1 = right
+    for v, d in (pins or {}).items():
+        if v in node_in:
+            if d in left_devs:
+                m.add_eq({side[v]: 1.0}, 0.0)
+            elif d in right_devs:
+                m.add_eq({side[v]: 1.0}, 1.0)
+
+    # Capacity per side (aggregate of member devices).
+    for ki, k in enumerate(kinds):
+        cap_l = cluster.capacity(k) * len(left_devs)
+        cap_r = cluster.capacity(k) * len(right_devs)
+        tot = sum(areas[v][ki] for v in node_set)
+        coeffs = {side[v]: areas[v][ki] for v in node_set if areas[v][ki]}
+        if coeffs:
+            m.add_le(coeffs, cap_r)                       # right usage
+            m.add_ge(coeffs, tot - cap_l)                 # left usage
+    if balance_kind in kinds:
+        ki = kinds.index(balance_kind)
+        tot = sum(areas[v][ki] for v in node_set)
+        frac_r = len(right_devs) / (len(left_devs) + len(right_devs))
+        mean_r = tot * frac_r
+        coeffs = {side[v]: areas[v][ki] for v in node_set if areas[v][ki]}
+        if coeffs:
+            m.add_constraint(coeffs, (1 - balance_tol) * mean_r,
+                             (1 + balance_tol) * mean_r)
+
+    # Cut edges cost: representative inter-group distance.
+    rep_cost = cluster.comm_cost(left_devs[-1], right_devs[0], 1.0)
+    for c in graph.channels:
+        if c.src in node_in and c.dst in node_in:
+            y = m.add_var(0.0, 1.0, integer=False,
+                          obj=c.width_bits * rep_cost)
+            m.add_ge({y: 1.0, side[c.src]: -1.0, side[c.dst]: 1.0}, 0.0)
+            m.add_ge({y: 1.0, side[c.src]: 1.0, side[c.dst]: -1.0}, 0.0)
+
+    sol = m.solve(time_limit=time_limit)
+    return {v: int(round(sol[side[v]])) for v in node_set}

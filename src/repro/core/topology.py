@@ -1,0 +1,232 @@
+"""Cluster topology + communication-cost metric — paper §4.3 (C2).
+
+dist(F_i, F_j) per Eq. 3 (daisy-chain), the ring variant, and the other
+topologies the paper lists (bus, star, mesh, hypercube).  λ scales the cost
+for the interconnect protocol relative to the 100 Gbps Ethernet baseline
+(paper: PCIe Gen3x16 → 12.5×).  On TPU, λ(ICI)=1 and λ(DCN)=ICI_bw/DCN_bw.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Protocol:
+    """An interconnect protocol with bandwidth + per-message latency."""
+
+    name: str
+    bandwidth_Bps: float          # bytes/second per link
+    latency_s: float              # per-message round-trip latency
+    resource_overhead: Dict[str, float] = dataclasses.field(
+        default_factory=dict)  # fraction of device resources (paper §4.4)
+
+
+# Paper baselines (§4.4, Table 10) and TPU equivalents.
+ETHERNET_100G = Protocol("ethernet-100g", 100e9 / 8, 1e-6,
+                         {"LUT": 0.0204, "FF": 0.0294, "BRAM": 0.0206})
+PCIE_GEN3X16 = Protocol("pcie-gen3x16", 100e9 / 8 / 12.5, 1.25e-6)
+INTER_NODE_10G = Protocol("inter-node-10g", 10e9 / 8, 50e-6)
+TPU_ICI = Protocol("tpu-ici", 50e9, 1e-6)          # ~50 GB/s/link
+TPU_DCN = Protocol("tpu-dcn", 6.25e9, 50e-6)       # pod-to-pod
+
+
+def lam(protocol: Protocol, baseline: Protocol = ETHERNET_100G) -> float:
+    """λ — cost scaling of a protocol vs the Ethernet baseline (paper §4.3)."""
+    return baseline.bandwidth_Bps / protocol.bandwidth_Bps
+
+
+class Topology:
+    """Base class: integer device ids 0..n-1 with a hop-distance metric."""
+
+    kind = "abstract"
+
+    def __init__(self, num_devices: int):
+        if num_devices < 1:
+            raise ValueError("need >=1 device")
+        self.num_devices = num_devices
+
+    def dist(self, i: int, j: int) -> int:
+        raise NotImplementedError
+
+    def check(self, i: int, j: int) -> None:
+        if not (0 <= i < self.num_devices and 0 <= j < self.num_devices):
+            raise IndexError((i, j, self.num_devices))
+
+    def diameter(self) -> int:
+        n = self.num_devices
+        return max(self.dist(i, j) for i in range(n) for j in range(n))
+
+
+class DaisyChain(Topology):
+    """Eq. 3: dist = |device_num_i - device_num_j|."""
+
+    kind = "daisy-chain"
+
+    def dist(self, i: int, j: int) -> int:
+        self.check(i, j)
+        return abs(i - j)
+
+
+class Ring(Topology):
+    """Eq. 3-ring: min(|i-j|, total - |i-j|) (paper's testbed: 4-FPGA ring)."""
+
+    kind = "ring"
+
+    def dist(self, i: int, j: int) -> int:
+        self.check(i, j)
+        d = abs(i - j)
+        return min(d, self.num_devices - d)
+
+
+class Bus(Topology):
+    """Shared bus: every pair is one hop (contention handled by cost model)."""
+
+    kind = "bus"
+
+    def dist(self, i: int, j: int) -> int:
+        self.check(i, j)
+        return 0 if i == j else 1
+
+
+class Star(Topology):
+    """Hub-and-spoke: device 0 is the hub."""
+
+    kind = "star"
+
+    def dist(self, i: int, j: int) -> int:
+        self.check(i, j)
+        if i == j:
+            return 0
+        return 1 if (i == 0 or j == 0) else 2
+
+
+class Mesh2D(Topology):
+    """2-D grid; optionally wrapped (torus — the TPU ICI topology)."""
+
+    kind = "mesh2d"
+
+    def __init__(self, rows: int, cols: int, torus: bool = False):
+        super().__init__(rows * cols)
+        self.rows, self.cols, self.torus = rows, cols, torus
+
+    def coords(self, i: int) -> Tuple[int, int]:
+        return divmod(i, self.cols)
+
+    def dist(self, i: int, j: int) -> int:
+        self.check(i, j)
+        (r1, c1), (r2, c2) = self.coords(i), self.coords(j)
+        dr, dc = abs(r1 - r2), abs(c1 - c2)
+        if self.torus:
+            dr = min(dr, self.rows - dr)
+            dc = min(dc, self.cols - dc)
+        return dr + dc
+
+
+class Hypercube(Topology):
+    kind = "hypercube"
+
+    def __init__(self, dim: int):
+        super().__init__(1 << dim)
+        self.dim = dim
+
+    def dist(self, i: int, j: int) -> int:
+        self.check(i, j)
+        return bin(i ^ j).count("1")
+
+
+TOPOLOGIES = {
+    "daisy-chain": DaisyChain,
+    "ring": Ring,
+    "bus": Bus,
+    "star": Star,
+    "mesh2d": Mesh2D,
+    "hypercube": Hypercube,
+}
+
+
+@dataclasses.dataclass
+class DeviceSpec:
+    """One device's capacities + performance (paper Table 2 / TPU v5e)."""
+
+    name: str
+    resources: Dict[str, float]
+    peak_flops: float = 0.0          # FLOP/s
+    hbm_bandwidth: float = 0.0       # bytes/s
+    onchip_bandwidth: float = 0.0    # bytes/s (BRAM / VMEM)
+    max_freq_hz: float = 0.0         # FPGA fabric clock ceiling
+
+
+# Alveo U55C (paper Table 2 + §2: HBM 460 GB/s, SRAM 35 TB/s, 300 MHz max).
+ALVEO_U55C = DeviceSpec(
+    "alveo-u55c",
+    {"LUT": 1146240, "FF": 2292480, "BRAM": 1776, "DSP": 8376, "URAM": 960},
+    peak_flops=8376 * 2 * 300e6,      # DSPs × 2 flops × fmax (fp32 MAC bound)
+    hbm_bandwidth=460e9,
+    onchip_bandwidth=35e12,
+    max_freq_hz=300e6,
+)
+
+# TPU v5e (assignment constants: 197 TFLOP/s bf16, 819 GB/s HBM, 16 GB).
+TPU_V5E = DeviceSpec(
+    "tpu-v5e",
+    {"hbm_bytes": 16 * 1024**3, "flops": 197e12, "vmem_bytes": 128 * 2**20},
+    peak_flops=197e12,
+    hbm_bandwidth=819e9,
+    onchip_bandwidth=35e12,
+)
+
+
+@dataclasses.dataclass
+class Cluster:
+    """A set of identical devices joined by a topology + protocol, optionally
+    grouped into nodes joined by a slower protocol (paper §5.7)."""
+
+    device: DeviceSpec
+    topology: Topology
+    protocol: Protocol = ETHERNET_100G
+    devices_per_node: Optional[int] = None
+    inter_node_protocol: Protocol = INTER_NODE_10G
+    utilization_threshold: float = 0.70   # paper Eq. 1 threshold T
+
+    @property
+    def num_devices(self) -> int:
+        return self.topology.num_devices
+
+    def node_of(self, dev: int) -> int:
+        if not self.devices_per_node:
+            return 0
+        return dev // self.devices_per_node
+
+    def protocol_between(self, i: int, j: int) -> Protocol:
+        if self.node_of(i) != self.node_of(j):
+            return self.inter_node_protocol
+        return self.protocol
+
+    def comm_cost(self, i: int, j: int, width_bits: float) -> float:
+        """Eq. 2 summand: width × dist × λ (0 when co-located)."""
+        if i == j:
+            return 0.0
+        d = self.topology.dist(i, j)
+        return width_bits * d * lam(self.protocol_between(i, j))
+
+    def capacity(self, kind: str) -> float:
+        return self.device.resources.get(kind, 0.0) * self.utilization_threshold
+
+
+def fpga_ring_cluster(n: int, devices_per_node: Optional[int] = None) -> Cluster:
+    """The paper's testbed: U55C cards in a ring over QSFP28 (4 per node)."""
+    return Cluster(ALVEO_U55C, Ring(n), ETHERNET_100G,
+                   devices_per_node=devices_per_node)
+
+
+def tpu_pod_cluster(num_pods: int = 2) -> Cluster:
+    """Multi-pod TPU: pods as 'nodes', DCN as the inter-node protocol.
+
+    At the inter-pod granularity the topology is a daisy chain of pods; each
+    pod internally is a Mesh2D torus handled by the intra-device floorplanner.
+    """
+    return Cluster(TPU_V5E, DaisyChain(num_pods), TPU_ICI,
+                   devices_per_node=1, inter_node_protocol=TPU_DCN,
+                   utilization_threshold=0.85)

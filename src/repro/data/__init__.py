@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, Pipeline, synthetic_batch_specs,
+                       make_pipeline)
+
+__all__ = ["DataConfig", "Pipeline", "synthetic_batch_specs",
+           "make_pipeline"]

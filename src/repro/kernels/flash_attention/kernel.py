@@ -1,0 +1,153 @@
+"""Flash attention Pallas TPU kernel — blocked online softmax.
+
+TPU geometry: q/k/v blocks live in VMEM; the MXU consumes [block_q, d] ×
+[d, block_k] tiles (d and block sizes multiples of 128 for fp32/bf16 MXU
+alignment).  Grid = (batch×kv_head×q_group, q_blocks, kv_blocks); the kv axis
+is the innermost (sequential on TPU) so the online-softmax running state
+(m, l, acc) lives in VMEM scratch across kv steps.
+
+Supports: causal, sliding window, logit softcap, GQA (q heads grouped over
+kv heads) — the feature set the assigned archs need (gemma2 window+softcap,
+qwen3/mistral GQA).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  seq_k: int, delta: int):
+    """One (q_block, kv_block) step.  Refs:
+    q_ref [block_q, d], k_ref/v_ref [block_k, d], o_ref [block_q, d];
+    scratch: m/l [block_q, 1], acc [block_q, d] fp32.
+    delta = Sk - Sq (decode alignment offset).
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Skip fully-masked blocks (causal upper triangle / outside window).
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + (block_q - 1) + delta
+    if window is not None:
+        # Loosest bound within the block is at the first query row.
+        run &= k_start + block_k - 1 > q_start + delta - window
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        ok &= kpos < seq_k
+        if causal:
+            ok &= kpos <= qpos + delta
+        if window is not None:
+            ok &= kpos > qpos + delta - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # [bq,1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # [bq,bk]
+        alpha = jnp.exp(m_prev - m_new)                    # [bq,1]
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = (alpha * acc_ref[...]
+                        + jax.lax.dot_general(
+                            p.astype(v_ref.dtype), v_ref[...],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+                      ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B,H,Sq,d]; k,v: [B,K,Sk,d], H % K == 0.  Returns [B,H,Sq,d]."""
+    B, H, Sq, d = q.shape
+    _, K, Sk, _ = k.shape
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    delta = Sk - Sq
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # Pad seq_k to block multiple (kernel masks the tail).
+    pad_k = (-Sk) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    pad_q = (-Sq) % block_q
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+
+    qr = q.reshape(B * K, G, Sq_p, d).reshape(B * K * G, Sq_p, d)
+    kr = jnp.repeat(k.reshape(B * K, Sk_p, d), G, axis=0)
+    vr = jnp.repeat(v.reshape(B * K, Sk_p, d), G, axis=0)
+
+    grid = (B * H, Sq_p // block_q, Sk_p // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, block_q=block_q, block_k=block_k, seq_k=Sk,
+            delta=delta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d),
+                               lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l (running sum)
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, H, Sq_p, d)
+    return out[:, :, :Sq, :]

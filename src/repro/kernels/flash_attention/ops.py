@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+On CPU (this container) the kernel body executes under interpret=True; on a
+real TPU backend the same BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       scale: Optional[float] = None,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: Optional[bool] = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, block_q=block_q,
+                           block_k=block_k, interpret=interp)
+
+
+__all__ = ["flash_attention_op", "attention_ref"]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: [B,H,Sq,d]; k,v: [B,K,Sk,d] with H multiple of K (GQA).
+
+    Returns [B,H,Sq,d] (fp32 accumulation, cast to q.dtype).
+    """
+    B, H, Sq, d = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(B, K, G, Sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    Sk = k.shape[2]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        # Align ends: query i attends to keys <= i + (Sk - Sq).
+        ok &= kpos <= qpos + (Sk - Sq)
+    if window is not None:
+        ok &= kpos > qpos + (Sk - Sq) - window
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, d).astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Systolic-array matmul Pallas TPU kernel (paper CNN benchmark, §5.5).
+
+The paper's AutoSA-generated accelerator is a 13×N grid of MAC PEs with
+operands pulsed through the array.  The TPU's MXU *is* a hardened 128×128
+systolic array, so the TPU-native adaptation (DESIGN.md §2) is a blocked
+matmul whose [BM,BK]×[BK,BN] tiles are MXU-aligned (multiples of 128) and
+whose K-loop accumulates in fp32 VMEM scratch — the "grid size" knob of the
+paper (13×4 … 13×20) becomes the (BM, BN) tile footprint.
+
+im2col'd VGG conv3 rides on this kernel (ops.conv_op).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 256
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, bm: int = DEFAULT_BM,
+           bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+           interpret: bool = False) -> jax.Array:
+    """a: [M, K]; b: [K, N] → [M, N] (fp32 accumulation)."""
+    M, K = a.shape
+    _, N = b.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N]

@@ -1,0 +1,39 @@
+"""Jit'd wrappers: blocked matmul + im2col conv (VGG conv3)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import matmul
+from .ref import conv_im2col_ref, matmul_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_op(a, b, bm: int = 256, bn: int = 256, bk: int = 256,
+              interpret: Optional[bool] = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv_op(x, w, interpret: Optional[bool] = None):
+    """3×3 same conv via im2col + systolic matmul.
+    x: [H,W,Cin]; w: [3,3,Cin,Cout]."""
+    H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    cols = jnp.stack([xp[i:i + H, j:j + W, :]
+                      for i in range(3) for j in range(3)], axis=2)
+    cols = cols.reshape(H * W, 9 * Cin)
+    out = matmul_op(cols, w.reshape(9 * Cin, Cout), interpret=interpret)
+    return out.reshape(H, W, Cout)
+
+
+__all__ = ["matmul_op", "conv_op", "matmul_ref", "conv_im2col_ref"]

@@ -1,0 +1,22 @@
+"""Oracle for the systolic matmul kernel (and im2col conv helper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(a.dtype)
+
+
+def conv_im2col_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """VGG-style 3×3 same conv via im2col (paper CNN benchmark).
+    x: [H, W, Cin]; w: [3, 3, Cin, Cout] → [H, W, Cout]."""
+    H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    cols = jnp.stack([xp[i:i + H, j:j + W, :]
+                      for i in range(3) for j in range(3)], axis=2)
+    cols = cols.reshape(H * W, 9 * Cin)
+    out = cols @ w.reshape(9 * Cin, Cout)
+    return out.reshape(H, W, Cout)

@@ -1,0 +1,112 @@
+"""Partition plan: the TAPA-CS pipeline (graph → ILP partition → floorplan →
+pipelining → strategy) applied to an (arch × shape × mesh) cell.
+
+The plan records what the tool decided and why — it is consumed by steps.py
+(which optimizer, which pod strategy) and reported by dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..configs.base import SHAPES
+from ..core import (TPU_POD_GRID, Cluster, Partition, TaskGraph,
+                    floorplan_device, lm_pod_strategy, partition,
+                    pipeline_interconnect, tpu_pod_cluster)
+from ..core.costmodel import TPU_DCN_BW, TPU_HBM_BW, TPU_PEAK_FLOPS
+from ..models import ModelConfig
+from .graphs import build_lm_graph, total_param_bytes
+
+HBM_PER_CHIP = 16 * 1024 ** 3
+
+
+@dataclasses.dataclass
+class Plan:
+    arch: str
+    shape: str
+    num_pods: int
+    pod_strategy: str                 # dp | pp
+    optimizer: str                    # adamw | adafactor
+    microbatches: int
+    partition: Optional[Partition]
+    pipeline_depths: Optional[dict]
+    param_bytes: float
+    state_bytes_per_chip: float
+    rationale: str
+
+
+def make_plan(arch: str, cfg: ModelConfig, shape: str,
+              num_pods: int = 1, chips_per_pod: int = 256) -> Plan:
+    cell = SHAPES[shape]
+    pbytes = total_param_bytes(cfg)
+    # Optimizer choice (Eq. 1 resource gate): AdamW keeps bf16 params +
+    # fp32 grad-accum + 2×fp32 moments = 7×param_bytes of state; if that
+    # exceeds ~9 GB/chip (leaving headroom for activations in 16 GB HBM),
+    # fall back to Adafactor (3×param_bytes).
+    adam_state = pbytes * 7.0
+    optimizer = ("adamw" if adam_state / chips_per_pod <= 9 * 1024 ** 3
+                 else "adafactor")
+    state = pbytes * (7.0 if optimizer == "adamw" else 3.1)
+    state_per_chip = state / chips_per_pod
+
+    part = None
+    depths = None
+    strategy = "dp"
+    rationale = ""
+    if cell.kind == "train":
+        # Build the task graph and run the real partitioner across pods.
+        g = build_lm_graph(cfg, cell.global_batch, cell.seq_len,
+                           state_mult=6.0 if optimizer == "adamw" else 3.1)
+        flops_step = sum(float(t.meta.get("ops", 0.0))
+                         for t in g.tasks.values())
+        step_s = flops_step / (TPU_PEAK_FLOPS * chips_per_pod * num_pods
+                               * 0.4)
+        strategy = lm_pod_strategy(
+            pbytes, 0.0, flops_step, num_pods, HBM_PER_CHIP, chips_per_pod,
+            TPU_DCN_BW, step_s)
+        rationale = (f"pod strategy {strategy}: params {pbytes/1e9:.1f} GB, "
+                     f"est step {step_s*1e3:.0f} ms")
+        if num_pods > 1:
+            cluster = tpu_pod_cluster(num_pods)
+            # Per-pod capacity = chips × HBM (threshold inside Cluster).
+            # Resources rescaled to GB / TFLOP so ILP coefficients stay in
+            # HiGHS's numeric range (raw 1e15-scale values → Model error).
+            for t in g.tasks.values():
+                t.area = type(t.area)({
+                    "hbm_bytes": t.area["hbm_bytes"] / 1e9,
+                    "flops": t.area["flops"] / 1e12})
+            cluster.device.resources["hbm_bytes"] = (
+                HBM_PER_CHIP * chips_per_pod / 1e9)
+            # FLOPs are a balance target, not a capacity (per-step work vs
+            # per-second throughput): set the cap above the graph total so
+            # Eq. 1 binds on memory only, and the balance band does the
+            # compute-load balancing.
+            tot_tflops = sum(t.area["flops"] for t in g.tasks.values())
+            cluster.device.resources["flops"] = 2.0 * tot_tflops
+            part = partition(g, cluster, balance_kind="flops",
+                             balance_tol=0.9,
+                             exact_limit=2000, time_limit=30.0)
+            rep = pipeline_interconnect(g, part, cluster=cluster)
+            depths = rep.depth
+    # Microbatch count: 8 default; 16 when optimizer state already eats
+    # most of the 16 GB/chip budget (v3: state ≈ 10 GB/chip), or when the
+    # arch carries sequence-scan recurrences whose backward stacks per-step
+    # carries (xlstm mLSTM/sLSTM: 19.5 GB at mb=8 → fits at 16).
+    specs_all = list(cfg.pattern) + list(cfg.extra_layers)
+    recurrent_heavy = any(s.mixer in ("mlstm", "slstm") for s in specs_all)
+    microbatches = (16 if (state_per_chip > 6 * 1024 ** 3 or recurrent_heavy)
+                    else 8)
+    # Each microbatch must still cover every batch shard (data × pod), or
+    # the batch dim de-shards and activations replicate.
+    batch_shards = 16 * num_pods
+    if cell.kind == "train":
+        microbatches = min(microbatches,
+                           max(1, cell.global_batch // batch_shards))
+    return Plan(arch=arch, shape=shape, num_pods=num_pods,
+                pod_strategy=strategy, optimizer=optimizer,
+                microbatches=microbatches, partition=part,
+                pipeline_depths=depths,
+                param_bytes=pbytes, state_bytes_per_chip=state_per_chip,
+                rationale=rationale)

@@ -1,0 +1,273 @@
+"""Sharding rules — the TPU realization of the paper's intra-device
+floorplan + HBM channel binding (§4.5).
+
+Each parameter leaf name carries its role; the table below assigns mesh axes
+('data' = FSDP shard, 'model' = TP/EP shard).  Every axis is guarded by
+divisibility — a dimension that does not divide the mesh axis stays
+replicated (the floorplanner's "module spans slots" case).  Cache/input
+rules are dynamic in batch size (long_500k has batch 1 → sequence/state
+sharding takes over, the SP fallback).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Leaf-name → trailing-dims axis assignment (None = replicated dim).
+PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # Embedding tables: vocab over 'model' (Megatron vocab-parallel xent;
+    # the lookup pays a masked-gather + [B,S,D] all-reduce over 'model').
+    # §Perf iteration 2 tried D-sharding the untied lookup table (local row
+    # gather) — REFUTED: XLA's SPMD partitioner emits an invalid
+    # dynamic-slice for gathers from D-sharded tables (verifier failure),
+    # so the V-sharded layout stays; see EXPERIMENTS.md §Perf.
+    "embed_vd": ("model", None),
+    "unembed_dv": (None, "model"),
+    # attention (GQA)
+    "wq_dhk": ("data", "model", None),
+    "wk_dkh": ("data", "model", None),
+    "wv_dkh": ("data", "model", None),
+    "wo_hkd": ("model", None, "data"),
+    # dense FFN
+    "wi_df": ("data", "model"),
+    "wg_df": ("data", "model"),
+    "wo_fd": ("model", "data"),
+    # MoE — E over model (EP), D/F over data (weight FSDP).  §Perf it. 6
+    # tried full-mesh EP (E over model×data): REFUTED — the combine
+    # scatter-add all-reduces full-batch activations over the whole mesh
+    # (4.9→14.3 TiB/step on v3); this layout is the measured optimum.
+    "router_de": ("data", None),
+    "router_bias_e": (None,),
+    "wi_edf": ("model", "data", None),
+    "wg_edf": ("model", "data", None),
+    "wo_efd": ("model", None, "data"),
+    # MLA
+    "wq_down_dr": ("data", None),
+    "wq_up_rhk": (None, "model", None),
+    "wkv_down_dr": ("data", None),
+    "wk_up_rhk": (None, "model", None),
+    "wv_up_rhk": (None, "model", None),
+    # RG-LRU
+    "wx_dr": ("data", "model"),
+    "wgate_dr": ("data", "model"),
+    "conv_wr": (None, "model"),
+    "w_input_gate_rr": ("model", None),
+    "w_rec_gate_rr": ("model", None),
+    "lambda_r": ("model",),
+    "wo_rd": ("model", "data"),
+    # mLSTM
+    "w_up_di": ("data", "model"),
+    "w_gate_di": ("data", "model"),
+    "wq_ihk": ("model", None, None),
+    "wk_ihk": ("model", None, None),
+    "wv_ihk": ("model", None, None),
+    "w_if_ih": ("model", None),
+    "w_down_id": ("model", "data"),
+    # sLSTM
+    "wz_dd": ("data", "model"),
+    "wi_dd": ("data", "model"),
+    "wf_dd": ("data", "model"),
+    "wo_dd": ("data", "model"),
+    "w_out_dd": ("data", "model"),
+    # misc
+    "mtp_proj_dd": ("data", "model"),
+    "scale": (None,),
+    "bias": (None,),
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _axis_in_mesh(mesh: Mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        return all(a in mesh.axis_names for a in axis)
+    return axis in mesh.axis_names
+
+
+def _guarded(spec: Tuple, shape: Tuple[int, ...],
+             mesh: Mesh) -> Tuple:
+    out = []
+    for axis, dim in zip(spec, shape):
+        if axis is not None and _axis_in_mesh(mesh, axis) \
+                and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+# Serving layout (§Perf iteration 8): decode moves one token through every
+# weight, so FSDP's per-layer weight all-gather dominates the step.  For
+# serving, drop 'data' from dense weight rules (pure TP — weights resident)
+# and spread MoE experts over the full mesh (1 expert/chip at v3 scale; the
+# combine traffic that killed this layout for TRAINING is negligible at
+# S=1).
+SERVE_OVERRIDES: Dict[str, Tuple] = {
+    "wi_edf": (("model", "data"), None, None),
+    "wg_edf": (("model", "data"), None, None),
+    "wo_efd": (("model", "data"), None, None),
+}
+
+
+def param_spec(path, leaf, mesh: Mesh, tied: bool = False,
+               serve: bool = False) -> P:
+    """PartitionSpec for one parameter leaf (path-aware: stacked block leaves
+    carry a leading superblock axis that stays unsharded).
+
+    tied=True (no separate unembed table): the shared embed_vd must serve
+    the vocab-parallel xent → V-sharded; the lookup then pays the masked-
+    gather all-reduce.
+    serve=True: decode-time layout (no FSDP; full-mesh EP) — see
+    SERVE_OVERRIDES.
+    """
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    rule = PARAM_RULES.get(name)
+    shape = leaf.shape
+    if rule is None:
+        return P()
+    if name == "embed_vd" and tied:
+        rule = ("model", None)
+    if serve:
+        if name in SERVE_OVERRIDES:
+            # Full-mesh EP needs E % (model×data) == 0 (v3: 256 experts);
+            # otherwise degrade to E-over-model with weight-FSDP kept on
+            # the data axis (v2: 160 experts — replicating 283 GB of
+            # experts per chip is NOT an option).
+            cand = SERVE_OVERRIDES[name]
+            lead_ = len(shape) - len(cand)
+            if shape[lead_] % _axis_size(mesh, cand[0]) == 0:
+                rule = cand
+            # else: keep the training rule (E-model + D/F-data FSDP)
+        else:
+            stripped = tuple(None if a == "data" else a for a in rule)
+            # Guard against full replication: if stripping 'data' leaves a
+            # big leaf unsharded (llava: 56 heads don't divide model=16 →
+            # wq would replicate 103 MB × 60 layers), keep the training
+            # rule — resident-but-FSDP beats replicated.
+            stacked_ = any(k in ("blocks", "enc_blocks") for k in keys)
+            lead_ = 1 if (stacked_ and len(shape) == len(stripped) + 1) \
+                else 0
+            guard = _guarded(stripped, shape[lead_:], mesh)
+            nbytes = 1
+            for d in shape:
+                nbytes *= d
+            if all(a is None for a in guard) and nbytes > 4e6:
+                pass                     # keep training rule
+            else:
+                rule = stripped
+    stacked = any(k in ("blocks", "enc_blocks") for k in keys)
+    lead = 1 if (stacked and len(shape) == len(rule) + 1) else 0
+    trailing = _guarded(rule, shape[lead:], mesh)
+    return P(*((None,) * lead + trailing))
+
+
+def param_shardings(params_shape, mesh: Mesh, serve: bool = False):
+    """Pytree of NamedShardings matching a params (or optimizer) eval_shape
+    tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    tied = not any("unembed_dv" in jax.tree_util.keystr(p)
+                   for p, _ in flat)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(
+            mesh, param_spec(p, l, mesh, tied=tied, serve=serve)),
+        params_shape)
+
+
+# -- inputs -------------------------------------------------------------------
+
+def batch_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    """Batch dim sharded over (pod, data) when the pod axis exists — the
+    DP-over-pod strategy the partitioner selects (DESIGN.md §5/graphs.py)."""
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def input_shardings(specs: Dict[str, object], mesh: Mesh):
+    """Shardings for a train/prefill batch dict of ShapeDtypeStructs."""
+    ba = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        if shape[0] % bsize == 0 and bsize > 1:
+            return NamedSharding(mesh, P(ba, *(None,) * (len(shape) - 1)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+# -- decode caches ------------------------------------------------------------
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """Cache leaves: [L, B, ...].  Prefer batch over 'data'; if batch is not
+    shardable (long_500k B=1), shard the sequence/state dim instead (SP)."""
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    shape = leaf.shape
+    ba = batch_axes(mesh)            # ('pod','data') on multi-pod meshes:
+    # caches MUST shard batch over the same axes as the token inputs, or
+    # every decode step reshards the cache across pods (§Perf iteration 7:
+    # 40 GiB/step of cache all-gathers on mistral decode_32k multi).
+    bsz = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    dsz = mesh.shape.get("data", 1)
+    msz = mesh.shape.get("model", 1)
+    if len(shape) < 2:
+        return P()
+    spec: list = [None] * len(shape)
+    b_idx = 1                        # [L, B, ...]
+    if shape[b_idx] % bsz == 0 and bsz > 1:
+        spec[b_idx] = ba
+        data_used = True
+    elif shape[b_idx] % dsz == 0 and dsz > 1:
+        spec[b_idx] = "data"
+        data_used = True
+    else:
+        data_used = False
+    if name in ("k", "v", "pos", "c_kv", "k_rope") and len(shape) >= 3:
+        s_idx = 2                    # sequence dim
+        if not data_used and shape[s_idx] % dsz == 0 and dsz > 1:
+            spec[s_idx] = "data"
+        elif shape[s_idx] % msz == 0 and msz > 1 and name in ("c_kv",
+                                                              "k_rope",
+                                                              "pos"):
+            # MLA latent cache has no head dim to shard — sequence over
+            # 'model' (+ batch over 'data') keeps 32k×B caches per-chip
+            # small (v3 decode: 294 GB global → 1.15 GB/chip).
+            spec[s_idx] = "model"
+    if name in ("k", "v") and len(shape) == 5:
+        k_idx = 3                    # kv heads
+        if shape[k_idx] % msz == 0 and msz > 1:
+            spec[k_idx] = "model"
+        elif spec[2] is None and shape[2] % msz == 0 and msz > 1:
+            spec[2] = "model"        # shard sequence on model instead
+    if name in ("C", "n", "m", "h", "conv", "c"):
+        last = len(shape) - 1
+        if shape[last] % msz == 0 and msz > 1:
+            spec[last] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_shape, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_spec(p, l, mesh)),
+        cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

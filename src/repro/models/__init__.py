@@ -1,0 +1,14 @@
+"""LM model substrate: attention/FFN/MoE/recurrent layers + stack assembly."""
+from .transformer import (LayerSpec, ModelConfig, init_params, init_cache,
+                          train_loss, serve_step, param_count, apply_layer)
+from .attention import AttnConfig, MLAConfig
+from .ffn import FFNConfig
+from .moe import MoEConfig
+from .recurrent import MLSTMConfig, RGLRUConfig, SLSTMConfig
+
+__all__ = [
+    "LayerSpec", "ModelConfig", "init_params", "init_cache", "train_loss",
+    "serve_step", "param_count", "apply_layer",
+    "AttnConfig", "MLAConfig", "FFNConfig", "MoEConfig",
+    "MLSTMConfig", "RGLRUConfig", "SLSTMConfig",
+]

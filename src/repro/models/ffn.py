@@ -1,0 +1,46 @@
+"""Dense FFN (GLU family) — LLaMA/Gemma/Qwen style gated MLPs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Array
+from .shardctx import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"    # silu → SwiGLU; gelu → GeGLU
+    gated: bool = True
+
+
+def init_ffn(rng: Array, cfg: FFNConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = {
+        "wi_df": layers.dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "wo_fd": layers.dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+    }
+    if cfg.gated:
+        p["wg_df"] = layers.dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def ffn_forward(params: dict, cfg: FFNConfig, x: Array) -> Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi_df"])
+    h = shard(h, "batch", None, "model")
+    if cfg.gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg_df"])
+        g = shard(g, "batch", None, "model")
+        h = layers.act_fn(cfg.activation)(g) * h
+    else:
+        h = layers.act_fn(cfg.activation)(h)
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo_fd"])
+    # S-sharded output anchor (Megatron-SP): the partial-sum output of the
+    # F-sharded contraction lowers to reduce-scatter (1× payload) instead
+    # of all-reduce to replicated-S (2×).  §Perf iteration 3.
+    return shard(out, "batch", "model", None)

@@ -1,0 +1,127 @@
+"""Shared layer primitives: norms, rotary embeddings, dense init, softcap.
+
+Pure-functional: params are nested dicts of jnp arrays; every layer exposes
+``init(rng, ...) -> params`` and ``apply(params, x, ...) -> y``.  Leaf names
+carry the logical-axis convention consumed by launch/shardings.py:
+
+    kernel axes named by suffix: _de (d_model->d_ff like), _dv (d_model->
+    vocab), w_qkv etc.  See shardings.LOGICAL_RULES.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(rng: Array, in_dim: int, out_dim: int,
+               dtype=jnp.float32) -> Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32)).astype(dtype)
+
+
+# -- normalization -----------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6,
+            zero_centered: bool = False) -> Array:
+    """RMSNorm; ``zero_centered`` uses (1+scale) — Gemma convention."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = params["scale"].astype(jnp.float32)
+    if zero_centered:
+        s = 1.0 + s
+    return (y * s).astype(dt)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# -- logit soft-capping (Gemma-2) --------------------------------------------
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None or cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               fraction: float = 1.0) -> Array:
+    """Inverse frequencies over the rotated sub-dimension.
+
+    fraction < 1 rotates only the first ``fraction*head_dim`` dims — the
+    ChatGLM "2d RoPE" convention (half the dims carry 1-D RoPE, the rest
+    pass through; GLM's second positional channel is unused for causal LM).
+    """
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    exponents = jnp.arange(0, rot, 2, dtype=jnp.float32) / rot
+    return 1.0 / (theta ** exponents)  # [rot/2]
+
+
+def apply_rope(x: Array, positions: Array, inv_freq: Array) -> Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    rot2 = inv_freq.shape[0]          # pairs
+    rot = 2 * rot2
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # [...,S,rot/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    cos = jnp.cos(angles)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# -- activations --------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# -- embedding ----------------------------------------------------------------
+
+def embed_lookup(table: Array, ids: Array, scale_by_dim: bool = False) -> Array:
+    out = jnp.take(table, ids, axis=0)
+    if scale_by_dim:
+        out = out * jnp.asarray(math.sqrt(table.shape[1]), out.dtype)
+    return out
+
+
+def unembed(table: Array, x: Array) -> Array:
+    """Tied unembedding: logits = x @ table.T (fp32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN — DeepSeek-V2/V3 style: fine-grained routed experts
+(top-k, optionally aux-loss-free bias routing) + shared experts.
+
+Dispatch is capacity-based gather/scatter (TPU-native: no [T,E,C] one-hot
+einsum is ever materialized; the dispatch index tensor is [G,E,C] int32 and
+activations move via take/scatter, which GSPMD lowers to all-to-all /
+all-gather when experts are sharded on the model axis).  Tokens are grouped
+by their data shard so expert-parallel capacity is per (group, expert).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .ffn import FFNConfig, ffn_forward, init_ffn
+from .layers import Array
+from .shardctx import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    num_experts: int
+    top_k: int
+    num_shared: int = 1               # shared experts (DeepSeek)
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    aux_loss_free: bool = True        # DeepSeek-V3 bias-based balancing
+    router_softcap: Optional[float] = None
+    aux_loss_weight: float = 0.001
+
+
+def init_moe(rng: Array, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 4)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff_expert
+    # Per-expert gated-GLU weights, stacked on the expert axis.
+    def pe(key, i, o):
+        scale = 1.0 / (i ** 0.5)
+        return (jax.random.normal(key, (E, i, o), jnp.float32)
+                * scale).astype(dtype)
+    p = {
+        "router_de": layers.dense_init(ks[0], D, E, jnp.float32),
+        "router_bias_e": jnp.zeros((E,), jnp.float32),
+        "wi_edf": pe(ks[1], D, F),
+        "wg_edf": pe(ks[2], D, F),
+        "wo_efd": pe(ks[3], F, D),
+    }
+    if cfg.num_shared:
+        p["shared"] = init_ffn(
+            jax.random.fold_in(rng, 7),
+            FFNConfig(D, F * cfg.num_shared, cfg.activation), dtype)
+    return p
+
+
+def _route(params: dict, cfg: MoEConfig, x: Array) -> Tuple[Array, Array, Array]:
+    """Returns (top-k expert ids [G,S,k], combine weights [G,S,k], aux loss)."""
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                        params["router_de"])
+    logits = layers.softcap(logits, cfg.router_softcap)
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = logits + params["router_bias_e"] if cfg.aux_loss_free else logits
+    _, idx = jax.lax.top_k(select, cfg.top_k)                   # [G,S,k]
+    w = jnp.take_along_axis(probs, idx, axis=-1)                # [G,S,k]
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance aux loss (kept even in aux-free mode as a
+    # monitored metric; weight 0 disables its gradient).  ce computed via
+    # scatter-add histogram — never materializes a [G,S,k,E] one-hot.
+    me = jnp.mean(probs, axis=(0, 1))
+    counts = jnp.zeros((cfg.num_experts,), jnp.float32).at[
+        idx.reshape(-1)].add(1.0)
+    ce = counts / idx.size
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return idx, w.astype(x.dtype), aux
+
+
+def moe_forward(params: dict, cfg: MoEConfig, x: Array
+                ) -> Tuple[Array, Array]:
+    """x: [G, S, D] (G = token groups, e.g. the batch/data-shard axis).
+
+    Returns (y, aux_loss).
+    """
+    G, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = max(1, int(S * k / E * cfg.capacity_factor))
+    idx, w, aux = _route(params, cfg, x)
+
+    flat_e = idx.reshape(G, S * k)                       # expert of each slot
+    # Position of each (token, choice) within its expert's capacity buffer,
+    # via stable sort-rank (memory O(S·k) + [G,E] histogram — the [G,S·k,E]
+    # one-hot cumsum of GShard would not scale to E=256 at 1M tokens).
+    order = jnp.argsort(flat_e, axis=1, stable=True)     # [G, S*k]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    counts = jax.vmap(
+        lambda fe: jnp.zeros((E,), jnp.int32).at[fe].add(1))(flat_e)
+    starts = jnp.cumsum(counts, axis=1) - counts         # [G, E]
+    pos_sorted = (jnp.arange(S * k)[None, :]
+                  - jnp.take_along_axis(starts, sorted_e, axis=1))
+    pos = jax.vmap(lambda o, p: jnp.zeros((S * k,), jnp.int32).at[o].set(p))(
+        order, pos_sorted)
+    keep = pos < C                                       # capacity drop mask
+    # Dispatch destination in the flat [G, E*C] buffer; dropped slots get an
+    # out-of-bounds index which scatter mode="drop" discards.
+    dest = jnp.where(keep, flat_e * C + pos, E * C)
+    src_tok = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(S * k)
+    buf_src = jnp.full((G, E * C), S, jnp.int32)         # S = sentinel (pad)
+    buf_src = jax.vmap(
+        lambda b, d: b.at[d].set(src_tok, mode="drop"))(buf_src, dest)
+    # Per-slot combine weight, scattered once (small: [G, E*C] fp32).
+    w_buf = jnp.zeros((G, E * C), jnp.float32)
+    w_buf = jax.vmap(lambda b, d, v: b.at[d].set(v, mode="drop"))(
+        w_buf, dest, w.reshape(G, S * k).astype(jnp.float32))
+
+    # Dispatch gather with E-sharded indices: each expert shard gathers only
+    # its experts' slots → xe is born E-sharded, never unsharded.
+    # Training: E over 'model' + weight-FSDP over 'data' (§Perf iteration 6
+    # tried full-mesh EP — REFUTED for training: the combine scatter-add
+    # all-reduces full-batch activations over the whole mesh, 3× worse).
+    # Serving (§Perf it. 8): full-mesh EP — decode has S=1 so the combine
+    # is negligible and resident experts beat re-gathered weights.
+    from .shardctx import is_serve
+    if is_serve():
+        e_ax, g_ax = ("model", "data"), None
+    else:
+        e_ax, g_ax = "model", "batch"
+    idx3 = shard(buf_src.reshape(G, E, C), g_ax, e_ax, None)
+    x_pad = jnp.concatenate([x, jnp.zeros((G, 1, D), x.dtype)], axis=1)
+    xe = jax.vmap(lambda xb, ib: xb[ib])(x_pad, idx3)    # [G,E,C,D]
+    xe = shard(xe, g_ax, e_ax, None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi_edf"])
+    h = shard(h, g_ax, e_ax, None, None)
+    g = jnp.einsum("gecd,edf->gecf", xe, params["wg_edf"])
+    g = shard(g, g_ax, e_ax, None, None)
+    h = layers.act_fn(cfg.activation)(g) * h
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo_efd"])   # [G,E,C,D]
+    ye = shard(ye, g_ax, e_ax, None, None)
+
+    # Combine via scatter-add (no [G,S·k,D] intermediate): each slot's
+    # weighted output accumulates at its source token; sentinel slots land
+    # in the pad row which is sliced off.
+    w3 = shard(w_buf.reshape(G, E, C), g_ax, e_ax, None)
+    contrib = ye * w3[..., None].astype(ye.dtype)        # [G,E,C,D]
+    y = jnp.zeros((G, S + 1, D), ye.dtype)
+    y = jax.vmap(lambda yb, ib, cb: yb.at[ib.reshape(-1)].add(
+        cb.reshape(-1, D), mode="drop"))(y, idx3, contrib)
+    y = y[:, :S, :]
+    y = shard(y, "batch", None, None)
+
+    if cfg.num_shared:
+        y = y + ffn_forward(params["shared"],
+                            FFNConfig(D, cfg.d_ff_expert * cfg.num_shared,
+                                      cfg.activation), x)
+    return y.astype(x.dtype), aux
+
+
+def update_router_bias(params: dict, cfg: MoEConfig, idx: Array,
+                       gamma: float = 0.001) -> Array:
+    """DeepSeek-V3 aux-loss-free balancing: nudge per-expert bias opposite to
+    its load violation (run outside the gradient path, once per step)."""
+    load = jnp.mean(
+        jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32), axis=(0, 1, 2))
+    target = cfg.top_k / cfg.num_experts
+    return params["router_bias_e"] - gamma * jnp.sign(load - target)

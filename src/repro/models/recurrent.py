@@ -1,0 +1,362 @@
+"""Recurrent / linear-attention blocks: Griffin RG-LRU (recurrentgemma) and
+xLSTM's mLSTM / sLSTM cells.
+
+TPU adaptation notes (DESIGN.md §2): RG-LRU is an elementwise linear
+recurrence → ``jax.lax.associative_scan`` (log-depth, MXU-free, VPU bound).
+mLSTM has a matrix state with scalar gates → chunked parallel form (quadratic
+within a chunk on the MXU, linear scan across chunks).  sLSTM's normalizer
+recurrence is non-associative → true ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Array
+
+
+# =============================================================================
+# Griffin RG-LRU recurrent block (arXiv:2402.19427 §2.4)
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int            # recurrence width (Griffin: ~4/3 d_model -> here d)
+    conv_width: int = 4
+    c_const: float = 8.0
+
+
+def init_rglru(rng: Array, cfg: RGLRUConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 7)
+    D, R = cfg.d_model, cfg.d_rnn
+    # Λ init so that a = exp(-c·softplus(Λ)·σ(r)) starts near 0.9..0.999.
+    lam = jax.random.uniform(ks[0], (R,), jnp.float32, 0.1, 0.9)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / cfg.c_const))  # inverse softplus
+    return {
+        "wx_dr": layers.dense_init(ks[1], D, R, dtype),
+        "wgate_dr": layers.dense_init(ks[2], D, R, dtype),
+        "conv_wr": (jax.random.normal(ks[3], (cfg.conv_width, R), jnp.float32)
+                    / math.sqrt(cfg.conv_width)).astype(dtype),
+        "w_input_gate_rr": layers.dense_init(ks[4], R, R, dtype),
+        "w_rec_gate_rr": layers.dense_init(ks[5], R, R, dtype),
+        "lambda_r": lam,
+        "wo_rd": layers.dense_init(ks[6], R, D, dtype),
+    }
+
+
+def _causal_conv1d(x: Array, w: Array, state: Optional[Array] = None
+                   ) -> Tuple[Array, Array]:
+    """Depthwise causal conv.  x: [B,S,R]; w: [W,R].  Returns (y, new_state)
+    where state is the last W-1 inputs for streaming decode."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1):, :] if W > 1 else state
+
+
+def rglru_scan(a: Array, bx: Array) -> Array:
+    """h_t = a_t ⊙ h_{t-1} + bx_t (h_0 = 0) via associative scan."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_forward(params: dict, cfg: RGLRUConfig, x: Array,
+                  state: Optional[dict] = None
+                  ) -> Tuple[Array, Optional[dict]]:
+    """Griffin recurrent block body.  x: [B,S,D] → [B,S,D].
+
+    state (decode): {"conv": [B,W-1,R], "h": [B,R]} or None (training).
+    """
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, params["wgate_dr"]))
+    u = jnp.einsum("bsd,dr->bsr", x, params["wx_dr"])
+    conv_state = state["conv"] if state else None
+    u, new_conv = _causal_conv1d(u, params["conv_wr"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", u, params["w_rec_gate_rr"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", u, params["w_input_gate_rr"]))
+    # Recurrence runs in fp32 (gates are exponentials of fp32 Λ); output is
+    # cast back to the residual-stream dtype.
+    log_a = (-cfg.c_const * jax.nn.softplus(params["lambda_r"])
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_x = (u * i).astype(jnp.float32)
+    # sqrt(1-a^2) input normalization (Griffin eq. 4), fp32 for stability.
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated_x
+    if state is not None:
+        h_prev = state["h"].astype(jnp.float32)
+        # Single/short-step decode: explicit scan (cheap for S small).
+        def step(h, ab):
+            a_t, b_t = ab
+            h = a_t * h + b_t
+            return h, h
+        hT, hs = jax.lax.scan(step, h_prev,
+                              (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "h": hT.astype(state["h"].dtype)}
+    else:
+        h = rglru_scan(a, bx)
+        new_state = None
+    y = jnp.einsum("bsr,rd->bsd", (h * gate.astype(jnp.float32)
+                                   ).astype(x.dtype), params["wo_rd"])
+    return y, new_state
+
+
+def init_rglru_state(cfg: RGLRUConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+            "h": jnp.zeros((batch, cfg.d_rnn), dtype)}
+
+
+# =============================================================================
+# xLSTM mLSTM — matrix-memory cell with exponential gating
+# (arXiv:2405.04517 §2.3), chunked-parallel training form.
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    num_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.num_heads
+
+
+def init_mlstm(rng: Array, cfg: MLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 8)
+    D, DI, H, hd = cfg.d_model, cfg.d_inner, cfg.num_heads, cfg.head_dim
+    # q/k/v are BLOCK-DIAGONAL per head (xLSTM §4: di²/H params each, not
+    # di² — the difference is 2.6× on total params at 1.3B scale).
+    def bd(key):
+        sub = jax.random.split(key, H)
+        return jnp.stack([layers.dense_init(s, hd, hd, dtype) for s in sub])
+    return {
+        "w_up_di": layers.dense_init(ks[0], D, DI, dtype),
+        "w_gate_di": layers.dense_init(ks[1], D, DI, dtype),
+        "wq_hkk": bd(ks[2]),            # [H, hd, hd]
+        "wk_hkk": bd(ks[3]),
+        "wv_hkk": bd(ks[4]),
+        "w_if_ih": layers.dense_init(ks[5], DI, 2 * H, jnp.float32),
+        "norm": layers.rmsnorm_init(DI, dtype),
+        "w_down_id": layers.dense_init(ks[6], DI, D, dtype),
+    }
+
+
+def _mlstm_attention_chunk(q, k, v, log_f, log_i):
+    """Stabilized intra-chunk quadratic mLSTM (matrix D form).
+
+    q,k,v: [B,H,C,hd]; log_f/log_i: [B,H,C] (log forget/input gates).
+    Returns numerator [B,H,C,hd], denominator [B,H,C], plus per-chunk state
+    summary for the inter-chunk scan.
+    """
+    C = q.shape[2]
+    cum_f = jnp.cumsum(log_f, axis=-1)                      # [B,H,C]
+    # D[t,s] = exp(cum_f[t]-cum_f[s] + log_i[s]) for s<=t
+    dmat = (cum_f[..., :, None] - cum_f[..., None, :]
+            + log_i[..., None, :])
+    mask = jnp.tril(jnp.ones((C, C), bool))
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)               # stabilizer
+    m = jnp.maximum(m, -1e30)
+    dexp = jnp.exp(dmat - m)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhck,bhsk->bhcs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    w = s * dexp
+    num = jnp.einsum("bhcs,bhsk->bhck", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    den = jnp.sum(w, axis=-1)        # [B,H,C] — signed; abs after combine
+    return num, den, m[..., 0], cum_f
+
+
+def mlstm_forward(params: dict, cfg: MLSTMConfig, x: Array,
+                  state: Optional[dict] = None
+                  ) -> Tuple[Array, Optional[dict]]:
+    """x: [B,S,D].  Training: chunked parallel over S; decode: recurrent."""
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up_di"])
+    gate = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, params["w_gate_di"]))
+    up_h = up.reshape(B, S, H, hd)
+    q = jnp.einsum("bshk,hkq->bhsq", up_h, params["wq_hkk"])
+    k = jnp.einsum("bshk,hkq->bhsq", up_h, params["wk_hkk"])
+    v = jnp.einsum("bshk,hkq->bhsq", up_h, params["wv_hkk"])
+    if_gates = jnp.einsum("bsi,ih->bsh", up.astype(jnp.float32),
+                          params["w_if_ih"])
+    log_i = if_gates[..., :H].transpose(0, 2, 1)            # [B,H,S]
+    log_f = jax.nn.log_sigmoid(if_gates[..., H:]).transpose(0, 2, 1)
+
+    if state is not None:
+        # Recurrent decode: C_t = f C + i v k^T ; n_t = f n + i k.
+        Cst, nst, mst = state["C"], state["n"], state["m"]
+        def step(carry, inp):
+            Cc, nc, mc = carry
+            q_t, k_t, v_t, li, lf = inp                     # [B,H,hd]×3,[B,H]
+            m_new = jnp.maximum(lf + mc, li)
+            fg = jnp.exp(lf + mc - m_new)[..., None]
+            ig = jnp.exp(li - m_new)[..., None]
+            Cn = fg[..., None] * Cc + ig[..., None] * (
+                v_t[..., :, None] * k_t[..., None, :])
+            nn = fg * nc + ig * k_t
+            scale = 1.0 / math.sqrt(hd)
+            num = jnp.einsum("bhvk,bhk->bhv", Cn, q_t * scale)
+            den = jnp.abs(jnp.einsum("bhk,bhk->bh", nn, q_t * scale))
+            h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+            return (Cn, nn, m_new), h
+        seq = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+               v.transpose(2, 0, 1, 3), log_i.transpose(2, 0, 1),
+               log_f.transpose(2, 0, 1))
+        (Cn, nn, mn), hs = jax.lax.scan(step, (Cst, nst, mst), seq)
+        h = hs.transpose(1, 2, 0, 3)                        # [B,H,S,hd]
+        new_state = {"C": Cn, "n": nn, "m": mn}
+    else:
+        # Chunked parallel training path: intra-chunk quadratic only.
+        # (Cross-chunk state contribution is handled by processing the whole
+        #  sequence as chunks via scan carrying (C, n, m).)
+        Cch = min(cfg.chunk, S)
+        assert S % Cch == 0
+        nchunks = S // Cch
+        def chunk_step(carry, inp):
+            Cc, nc, mc = carry
+            qc, kc, vc, lic, lfc = inp                      # [B,H,C,*]
+            num_i, den_i, m_i, cum_f = _mlstm_attention_chunk(
+                qc, kc, vc, lfc, lic)
+            # Inter-chunk: contribution of carried state to each position.
+            m_comb = jnp.maximum(m_i, cum_f + mc[..., None])   # [B,H,C]
+            w_prev = jnp.exp(cum_f + mc[..., None] - m_comb)   # [B,H,C]
+            w_intra = jnp.exp(m_i - m_comb)
+            scale = 1.0 / math.sqrt(hd)
+            num_prev = jnp.einsum("bhck,bhvk->bhcv", qc * scale, Cc)
+            den_prev = jnp.einsum("bhck,bhk->bhc", qc * scale, nc)
+            num = (w_prev[..., None] * num_prev
+                   + w_intra[..., None] * num_i)
+            den = jnp.abs(w_prev * den_prev + w_intra * den_i)
+            h = num / jnp.maximum(den, jnp.exp(-m_comb))[..., None]
+            # Update carried state to end of chunk.
+            tot_f = cum_f[..., -1:]                          # [B,H,1]
+            m_new = jnp.maximum(tot_f[..., 0] + mc,
+                                jnp.max(tot_f - cum_f + lic, axis=-1))
+            decay_old = jnp.exp(tot_f[..., 0] + mc - m_new)[..., None]
+            wk = jnp.exp(tot_f - cum_f + lic - m_new[..., None])  # [B,H,C]
+            Cn = (decay_old[..., None] * Cc
+                  + jnp.einsum("bhc,bhck,bhcv->bhvk", wk, kc, vc))
+            nn = decay_old * nc + jnp.einsum("bhc,bhck->bhk", wk, kc)
+            return (Cn, nn, m_new), h
+        q_c = q.reshape(B, H, nchunks, Cch, hd).transpose(2, 0, 1, 3, 4)
+        k_c = k.reshape(B, H, nchunks, Cch, hd).transpose(2, 0, 1, 3, 4)
+        v_c = v.reshape(B, H, nchunks, Cch, hd).transpose(2, 0, 1, 3, 4)
+        li_c = log_i.reshape(B, H, nchunks, Cch).transpose(2, 0, 1, 3)
+        lf_c = log_f.reshape(B, H, nchunks, Cch).transpose(2, 0, 1, 3)
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        _, hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                             (q_c, k_c, v_c, li_c, lf_c))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+        new_state = None
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_inner).astype(x.dtype)
+    h = layers.rmsnorm(params["norm"], h) * gate
+    y = jnp.einsum("bsi,id->bsd", h, params["w_down_id"])
+    return y, new_state
+
+
+def init_mlstm_state(cfg: MLSTMConfig, batch: int) -> dict:
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+# =============================================================================
+# xLSTM sLSTM — scalar-memory cell with normalizer recurrence (non-associative
+# → sequential scan; arXiv:2405.04517 §2.2)
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    num_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def init_slstm(rng: Array, cfg: SLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 6)
+    D = cfg.d_model
+    return {
+        "wz_dd": layers.dense_init(ks[0], D, D, dtype),
+        "wi_dd": layers.dense_init(ks[1], D, D, jnp.float32),
+        "wf_dd": layers.dense_init(ks[2], D, D, jnp.float32),
+        "wo_dd": layers.dense_init(ks[3], D, D, dtype),
+        "norm": layers.rmsnorm_init(D, dtype),
+        "w_out_dd": layers.dense_init(ks[4], D, D, dtype),
+    }
+
+
+def slstm_forward(params: dict, cfg: SLSTMConfig, x: Array,
+                  state: Optional[dict] = None
+                  ) -> Tuple[Array, Optional[dict]]:
+    """x: [B,S,D].  Sequential scan (the sLSTM recurrence is stabilized with
+    the m-state and cannot be parallelized — paper §2.2)."""
+    B, S, D = x.shape
+    z = jnp.tanh(jnp.einsum("bsd,de->bse", x, params["wz_dd"]))
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, params["wo_dd"]))
+    log_i = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["wi_dd"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["wf_dd"]))
+
+    if state is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.zeros((B, D), jnp.float32)
+        m0 = jnp.full((B, D), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        z_t, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(li - m_new)
+        c = fg * c + ig * z_t.astype(jnp.float32)
+        n = fg * n + ig
+        h = c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    (cT, nT, mT), hs = jax.lax.scan(
+        step, (c0, n0, m0),
+        (z.swapaxes(0, 1), log_i.swapaxes(0, 1), log_f.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).astype(x.dtype) * o
+    h = layers.rmsnorm(params["norm"], h)
+    y = jnp.einsum("bsd,de->bse", h, params["w_out_dd"])
+    new_state = {"c": cT, "n": nT, "m": mT} if state is not None else None
+    return y, new_state
+
+
+def init_slstm_state(cfg: SLSTMConfig, batch: int) -> dict:
+    D = cfg.d_model
+    return {"c": jnp.zeros((batch, D), jnp.float32),
+            "n": jnp.zeros((batch, D), jnp.float32),
+            "m": jnp.full((batch, D), -1e30, jnp.float32)}

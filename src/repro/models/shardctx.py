@@ -1,0 +1,103 @@
+"""Activation-sharding context: explicit with_sharding_constraint anchors.
+
+GSPMD propagates shardings from inputs, but when a weight's contracting dim
+and the activation batch share a mesh axis (ZeRO-3/FSDP), the partitioner
+may resolve the conflict by UN-sharding the batch (replicating multi-GB
+activations) instead of all-gathering the (much smaller) weight shard.
+Anchoring activations pins the efficient choice.  This is the TPU analogue
+of the paper's HBM channel binding (§4.5): the floorplanner decides where
+tensors live; propagation alone is not trusted.
+
+Models call ``shard(x, "batch", None, "model")``; when no mesh is active
+(CPU unit tests) this is the identity.  Axis names are filtered against the
+active mesh and guarded by divisibility, so the same model code runs on
+1-device CPU, a 16×16 pod, or a 2×16×16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], batch_axes: Tuple[str, ...] = ("data",),
+             serve: bool = False):
+    _state.mesh = mesh
+    _state.batch_axes = batch_axes
+    _state.serve = serve
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def is_serve() -> bool:
+    """True when tracing the decode path (serving layout — §Perf it. 8)."""
+    return bool(getattr(_state, "serve", False))
+
+
+def clear():
+    _state.mesh = None
+
+
+class use_mesh:
+    """Context manager: with shardctx.use_mesh(mesh, ('pod','data')): ..."""
+
+    def __init__(self, mesh: Optional[Mesh],
+                 batch_axes: Tuple[str, ...] = ("data",),
+                 serve: bool = False):
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self.serve = serve
+
+    def __enter__(self):
+        self.prev = (get_mesh(), getattr(_state, "batch_axes", ("data",)),
+                     getattr(_state, "serve", False))
+        set_mesh(self.mesh, self.batch_axes, self.serve)
+        return self
+
+    def __exit__(self, *exc):
+        set_mesh(*self.prev)
+        return False
+
+
+def _resolve(axis, mesh: Mesh, dim: int):
+    """Map symbolic axis → mesh axes (or None), guarded by divisibility.
+    Accepts a tuple of mesh axes (e.g. ("model","data") for full-mesh EP)."""
+    if axis is None:
+        return None
+    if axis == "batch":
+        axes = tuple(a for a in getattr(_state, "batch_axes", ("data",))
+                     if a in mesh.axis_names)
+        if not axes:
+            return None
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        return axes if (size > 1 and dim % size == 0) else None
+    if isinstance(axis, tuple):
+        if not all(a in mesh.axis_names for a in axis):
+            return None
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return axis if (size > 1 and dim % size == 0) else None
+    if axis in mesh.axis_names:
+        return axis if dim % mesh.shape[axis] == 0 else None
+    return None
+
+
+def shard(x: jax.Array, *spec):
+    """Anchor x's sharding; identity when no mesh is active."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    if len(spec) != x.ndim:
+        return x
+    resolved = tuple(_resolve(a, mesh, d) for a, d in zip(spec, x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

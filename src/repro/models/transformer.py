@@ -1,0 +1,469 @@
+"""Model assembly: decoder-only and encoder-decoder stacks over a repeating
+layer pattern ("super-block"), scanned for HLO compactness.
+
+Every assigned architecture is an instance of ModelConfig:
+  * pattern: the repeating tuple of LayerSpecs (e.g. gemma2 = (local, global),
+    recurrentgemma = (rglru, rglru, local-attn), xlstm = (mlstm×7, slstm)).
+  * The stack scans `num_superblocks` copies of the pattern (stacked params),
+    then applies `extra_layers` unrolled.
+
+Training path computes the cross-entropy WITHOUT materializing [B,S,V]
+logits (chunked unembed+logsumexp under jax.checkpoint).  Decode paths carry
+per-layer caches/states mirroring the stacked-param structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffnmod
+from . import layers
+from . import moe as moemod
+from . import recurrent as rec
+from .layers import Array
+from .shardctx import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                      # gqa|mla|rglru|mlstm|slstm|none
+    ffn: str = "dense"              # dense|moe|none
+    window: Optional[int] = None    # sliding window for this layer's attn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    vocab: int
+    pattern: Tuple[LayerSpec, ...]
+    num_superblocks: int
+    extra_layers: Tuple[LayerSpec, ...] = ()
+    # attention
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 128
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    query_scale: Optional[float] = None
+    # ffn
+    d_ff: int = 0
+    activation: str = "silu"
+    # gemma-2 style post-norms (norm applied to sublayer output too)
+    use_post_norm: bool = False
+    zero_centered_norm: bool = False
+    # MoE
+    moe: Optional[moemod.MoEConfig] = None
+    # MLA
+    mla: Optional[attn.MLAConfig] = None
+    # recurrent
+    rglru: Optional[rec.RGLRUConfig] = None
+    mlstm: Optional[rec.MLSTMConfig] = None
+    slstm: Optional[rec.SLSTMConfig] = None
+    # architecture style
+    arch: str = "decoder"           # decoder | encdec
+    enc_superblocks: int = 0
+    enc_pattern: Tuple[LayerSpec, ...] = ()
+    frontend: Optional[str] = None  # None | audio | vision
+    frontend_tokens: int = 0        # patches/frames prepended (vision)
+    mtp: bool = False               # DeepSeek-V3 multi-token-prediction head
+    tie_embeddings: bool = True
+    scale_embed: bool = False       # gemma convention
+    # dtypes
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    q_chunk: int = 256
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return (len(self.pattern) * self.num_superblocks
+                + len(self.extra_layers))
+
+    def attn_cfg(self, spec: LayerSpec,
+                 causal: bool = True) -> attn.AttnConfig:
+        return attn.AttnConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            rope_theta=self.rope_theta, rope_fraction=self.rope_fraction,
+            qk_norm=self.qk_norm, attn_softcap=self.attn_softcap,
+            window=spec.window, query_scale=self.query_scale, causal=causal)
+
+    def ffn_cfg(self) -> ffnmod.FFNConfig:
+        return ffnmod.FFNConfig(self.d_model, self.d_ff, self.activation)
+
+
+# =============================================================================
+# Parameter initialization
+# =============================================================================
+
+def _init_layer(rng: Array, cfg: ModelConfig, spec: LayerSpec,
+                cross: bool = False) -> dict:
+    ks = jax.random.split(rng, 8)
+    dt = cfg.param_dtype
+    p: Dict[str, Any] = {"ln_mixer": layers.rmsnorm_init(cfg.d_model, dt)}
+    if spec.mixer == "gqa":
+        p["attn"] = attn.init_gqa(ks[0], cfg.attn_cfg(spec), dt)
+    elif spec.mixer == "mla":
+        p["attn"] = attn.init_mla(ks[0], cfg.mla, dt)
+    elif spec.mixer == "rglru":
+        p["attn"] = rec.init_rglru(ks[0], cfg.rglru, dt)
+    elif spec.mixer == "mlstm":
+        p["attn"] = rec.init_mlstm(ks[0], cfg.mlstm, dt)
+    elif spec.mixer == "slstm":
+        p["attn"] = rec.init_slstm(ks[0], cfg.slstm, dt)
+    elif spec.mixer != "none":
+        raise ValueError(spec.mixer)
+    if cross:
+        p["ln_cross"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = attn.init_gqa(ks[1], cfg.attn_cfg(spec), dt)
+    if spec.ffn != "none":
+        p["ln_ffn"] = layers.rmsnorm_init(cfg.d_model, dt)
+        if spec.ffn == "moe":
+            p["ffn"] = moemod.init_moe(ks[2], cfg.moe, dt)
+        else:
+            p["ffn"] = ffnmod.init_ffn(ks[2], cfg.ffn_cfg(), dt)
+    if cfg.use_post_norm:
+        p["post_mixer"] = layers.rmsnorm_init(cfg.d_model, dt)
+        if spec.ffn != "none":
+            p["post_ffn"] = layers.rmsnorm_init(cfg.d_model, dt)
+    return p
+
+
+def _init_superblock(rng: Array, cfg: ModelConfig,
+                     pattern: Sequence[LayerSpec], cross: bool) -> dict:
+    ks = jax.random.split(rng, len(pattern))
+    return {f"p{i}": _init_layer(ks[i], cfg, spec, cross)
+            for i, spec in enumerate(pattern)}
+
+
+def init_params(rng: Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    dt = cfg.param_dtype
+    # Stacked decoder super-blocks: leading axis = num_superblocks.
+    blk_keys = jax.random.split(ks[0], cfg.num_superblocks)
+    cross = cfg.arch == "encdec"
+    blocks = jax.vmap(
+        lambda k: _init_superblock(k, cfg, cfg.pattern, cross))(blk_keys)
+    params: Dict[str, Any] = {
+        "embed_vd": layers.embed_init(ks[1], cfg.vocab, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.extra_layers:
+        ek = jax.random.split(ks[2], len(cfg.extra_layers))
+        params["extra"] = {f"e{i}": _init_layer(ek[i], cfg, spec, cross)
+                           for i, spec in enumerate(cfg.extra_layers)}
+    if not cfg.tie_embeddings:
+        params["unembed_dv"] = layers.dense_init(ks[3], cfg.d_model,
+                                                 cfg.vocab, dt)
+    if cfg.arch == "encdec":
+        enc_keys = jax.random.split(ks[4], cfg.enc_superblocks)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_superblock(k, cfg, cfg.enc_pattern, False)
+        )(enc_keys)
+        params["enc_final_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+    if cfg.mtp:
+        params["mtp_block"] = _init_layer(
+            ks[5], cfg, LayerSpec("gqa", "dense"), False)
+        params["mtp_proj_dd"] = layers.dense_init(
+            ks[6], 2 * cfg.d_model, cfg.d_model, dt)
+    return params
+
+
+# =============================================================================
+# Layer application (shared by train / decode)
+# =============================================================================
+
+def _norm(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    return layers.rmsnorm(p, x, zero_centered=cfg.zero_centered_norm)
+
+
+def apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, x: Array,
+                positions: Array, cache: Optional[dict] = None,
+                pos: Optional[Array] = None,
+                enc_out: Optional[Array] = None,
+                causal: bool = True) -> Tuple[Array, Optional[dict], Array]:
+    """One residual block.  Returns (x, new_cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = None
+    # (§Perf iteration 4 placed a single all-gather point here to dedupe
+    # the attention-in/FFN-in gathers — REVERTED: the gathered full-S
+    # residual became the scan's saved carry, costing L×[B,S,D] HBM
+    # (llava: +6.5 GB/chip) for a 7 % wire win.  See EXPERIMENTS.md §Perf.)
+    h = _norm(cfg, p["ln_mixer"], x)
+    if spec.mixer == "gqa":
+        acfg = cfg.attn_cfg(spec, causal=causal)
+        if cache is not None and "k" in cache:
+            new_cache, h = attn.gqa_decode(p["attn"], acfg, cache, h, pos)
+        else:
+            h = attn.gqa_forward(p["attn"], acfg, h, positions,
+                                 q_chunk=cfg.q_chunk)
+    elif spec.mixer == "mla":
+        if cache is not None:
+            new_cache, h = attn.mla_decode(p["attn"], cfg.mla, cache, h, pos)
+        else:
+            h = attn.mla_forward(p["attn"], cfg.mla, h, positions,
+                                 q_chunk=cfg.q_chunk)
+    elif spec.mixer == "rglru":
+        h, new_cache = rec.rglru_forward(p["attn"], cfg.rglru, h, cache)
+    elif spec.mixer == "mlstm":
+        h, new_cache = rec.mlstm_forward(p["attn"], cfg.mlstm, h, cache)
+    elif spec.mixer == "slstm":
+        h, new_cache = rec.slstm_forward(p["attn"], cfg.slstm, h, cache)
+    elif spec.mixer == "none":
+        h = jnp.zeros_like(x)
+    if cfg.use_post_norm and "post_mixer" in p:
+        h = _norm(cfg, p["post_mixer"], h)
+    x = x + h
+
+    if enc_out is not None and "cross" in p:
+        h = _norm(cfg, p["ln_cross"], x)
+        h = attn.cross_forward(p["cross"], cfg.attn_cfg(spec), h, enc_out)
+        x = x + h
+
+    if spec.ffn != "none":
+        h = _norm(cfg, p["ln_ffn"], x)
+        if spec.ffn == "moe":
+            h, aux = moemod.moe_forward(p["ffn"], cfg.moe, h)
+        else:
+            h = ffnmod.ffn_forward(p["ffn"], cfg.ffn_cfg(), h)
+        if cfg.use_post_norm and "post_ffn" in p:
+            h = _norm(cfg, p["post_ffn"], h)
+        x = x + h
+    # Residual-stream anchor with sequence parallelism: the scan carry is
+    # what survives per layer for backward — sharding its seq dim over
+    # 'model' (Megatron SP) divides saved-activation HBM by the TP width.
+    # Guarded: decode (S=1) and small smoke shapes fall back to replicated.
+    x = shard(x, "batch", "model", None)
+    return x, new_cache, aux
+
+
+# =============================================================================
+# Training forward + loss
+# =============================================================================
+
+def _embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    x = layers.embed_lookup(params["embed_vd"], batch["tokens"],
+                            scale_by_dim=cfg.scale_embed).astype(cfg.dtype)
+    if cfg.frontend == "vision":
+        # anyres patch embeddings prepended (stub frontend).
+        x = jnp.concatenate(
+            [batch["frontend"].astype(cfg.dtype), x], axis=1)
+    return shard(x, "batch", None, None)
+
+
+def _run_stack(params: dict, cfg: ModelConfig, x: Array, positions: Array,
+               enc_out: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Scan the decoder stack (training).  Returns (x, total_moe_aux)."""
+
+    # Long patterns (xlstm: 8 layers/super-block) get a second remat level:
+    # per-layer checkpoints inside the checkpointed super-block cap the
+    # backward working set at ONE layer's internals instead of the whole
+    # pattern's (mLSTM chunk-scan residuals are ~0.5 GB/layer at 4k seq).
+    inner_remat = len(cfg.pattern) >= 4
+
+    def body(carry, blk):
+        h = carry
+        aux_tot = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.pattern):
+            def one_layer(p, hh, spec=spec):
+                out, _, aux = apply_layer(cfg, spec, p, hh, positions,
+                                          enc_out=enc_out)
+                return out, aux
+            if inner_remat:
+                one_layer = jax.checkpoint(one_layer, prevent_cse=False)
+            h, aux = one_layer(blk[f"p{i}"], h)
+            aux_tot = aux_tot + aux
+        return h, aux_tot
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    aux = jnp.sum(auxs)
+    for i, spec in enumerate(cfg.extra_layers):
+        x, _, a = apply_layer(cfg, spec, params["extra"][f"e{i}"], x,
+                              positions, enc_out=enc_out)
+        aux = aux + a
+    return x, aux
+
+
+def _run_encoder(params: dict, cfg: ModelConfig, src: Array,
+                 positions: Array) -> Array:
+    def body(carry, blk):
+        h = carry
+        for i, spec in enumerate(cfg.enc_pattern):
+            h, _, _ = apply_layer(cfg, spec, blk[f"p{i}"], h, positions,
+                                  causal=False)
+        return h, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, src, params["enc_blocks"])
+    return layers.rmsnorm(params["enc_final_norm"], x)
+
+
+def _unembed_table(params: dict, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed_vd"]
+    return params["unembed_dv"].T
+
+
+def chunked_xent(params: dict, cfg: ModelConfig, x: Array, targets: Array,
+                 weights: Array, chunk: int = 512) -> Array:
+    """Softmax cross-entropy without a [B,S,V] intermediate."""
+    B, S, D = x.shape
+    table = _unembed_table(params, cfg)
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    @jax.checkpoint
+    def one(args):
+        xc, tc, wc = args
+        xc = shard(xc, "batch", None, None)
+        logits = layers.unembed(table, xc)                 # [B,C,V] fp32
+        logits = shard(logits, "batch", None, "model")     # vocab-parallel
+        logits = layers.softcap(logits, cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * wc)
+
+    xs = (x.reshape(B, n, chunk, D).swapaxes(0, 1),
+          targets.reshape(B, n, chunk).swapaxes(0, 1),
+          weights.reshape(B, n, chunk).swapaxes(0, 1))
+    losses = jax.lax.map(one, xs)
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    """batch: tokens [B,St], targets [B,S], weights [B,S]; optional
+    frontend [B,P,D] (vision) or src [B,Senc,D] (audio enc-dec)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    if cfg.arch == "encdec":
+        src = batch["src"].astype(cfg.dtype)
+        src_pos = jnp.broadcast_to(jnp.arange(src.shape[1]),
+                                   (B, src.shape[1]))
+        enc_out = _run_encoder(params, cfg, src, src_pos)
+    x, aux = _run_stack(params, cfg, x, positions, enc_out)
+    x = layers.rmsnorm(params["final_norm"], x,
+                       zero_centered=cfg.zero_centered_norm)
+    loss = chunked_xent(params, cfg, x, batch["targets"], batch["weights"])
+    if cfg.mtp:
+        # MTP head: one extra block over [h; embed(next_token)] predicting
+        # t+2 (DeepSeek-V3 §2.2) — sequential variant with depth 1.
+        emb_next = layers.embed_lookup(
+            params["embed_vd"], batch["targets"]).astype(cfg.dtype)
+        h2 = jnp.einsum("bsd,dD->bsD",
+                        jnp.concatenate([x, emb_next], -1),
+                        params["mtp_proj_dd"])
+        h2, _, _ = apply_layer(cfg, LayerSpec("gqa", "dense"),
+                               params["mtp_block"], h2, positions)
+        t2 = jnp.concatenate([batch["targets"][:, 1:],
+                              batch["targets"][:, -1:]], axis=1)
+        w2 = batch["weights"] * jnp.concatenate(
+            [batch["weights"][:, 1:], jnp.zeros_like(batch["weights"][:, :1])],
+            axis=1)
+        loss = loss + 0.3 * chunked_xent(params, cfg, h2, t2, w2)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss
+
+
+# =============================================================================
+# Decode (serve_step)
+# =============================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Cache pytree mirroring the stacked block structure."""
+    def one_layer(spec: LayerSpec) -> Optional[dict]:
+        if spec.mixer == "gqa":
+            return attn.init_kv_cache(cfg.attn_cfg(spec), batch, max_len,
+                                      dtype=cfg.dtype)
+        if spec.mixer == "mla":
+            return attn.init_mla_cache(cfg.mla, batch, max_len,
+                                       dtype=cfg.dtype)
+        if spec.mixer == "rglru":
+            return rec.init_rglru_state(cfg.rglru, batch)
+        if spec.mixer == "mlstm":
+            return rec.init_mlstm_state(cfg.mlstm, batch)
+        if spec.mixer == "slstm":
+            return rec.init_slstm_state(cfg.slstm, batch)
+        return {}
+
+    def stack_layer(spec: LayerSpec):
+        c = one_layer(spec)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.num_superblocks,) + a.shape).copy(), c)
+
+    cache = {"blocks": {f"p{i}": stack_layer(s)
+                        for i, s in enumerate(cfg.pattern)}}
+    if cfg.extra_layers:
+        cache["extra"] = {f"e{i}": one_layer(s)
+                          for i, s in enumerate(cfg.extra_layers)}
+    return cache
+
+
+def serve_step(params: dict, cfg: ModelConfig, cache: dict, tokens: Array,
+               pos: Array, enc_out: Optional[Array] = None
+               ) -> Tuple[dict, Array]:
+    """One decode step.  tokens: [B,1]; pos: scalar int32 (current absolute
+    position, same for the whole batch).  Returns (new_cache, logits[B,V])."""
+    x = layers.embed_lookup(params["embed_vd"], tokens,
+                            scale_by_dim=cfg.scale_embed).astype(cfg.dtype)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        blk, ch = xs
+        new_ch = {}
+        for i, spec in enumerate(cfg.pattern):
+            h, nc, _ = apply_layer(cfg, spec, blk[f"p{i}"], h, positions,
+                                   cache=ch[f"p{i}"], pos=pos,
+                                   enc_out=enc_out)
+            new_ch[f"p{i}"] = nc if nc is not None else ch[f"p{i}"]
+        return h, new_ch
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["blocks"]))
+    new_cache = {"blocks": new_blocks}
+    if cfg.extra_layers:
+        new_extra = {}
+        for i, spec in enumerate(cfg.extra_layers):
+            x, nc, _ = apply_layer(cfg, spec, params["extra"][f"e{i}"], x,
+                                   positions, cache=cache["extra"][f"e{i}"],
+                                   pos=pos, enc_out=enc_out)
+            new_extra[f"e{i}"] = nc if nc is not None else cache["extra"][f"e{i}"]
+        new_cache["extra"] = new_extra
+    x = layers.rmsnorm(params["final_norm"], x,
+                       zero_centered=cfg.zero_centered_norm)
+    logits = layers.unembed(_unembed_table(params, cfg), x[:, 0, :])
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return new_cache, logits
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (for 6·N·D MODEL_FLOPS cross-check)."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    return int(sum(int(np_prod(l.shape))
+                   for l in jax.tree.leaves(shapes)))
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

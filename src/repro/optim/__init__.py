@@ -1,0 +1,11 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule)
+from .adafactor import AdafactorConfig, adafactor_init, adafactor_update
+from .compression import (compress_int8, decompress_int8,
+                          compressed_psum, ErrorFeedback)
+
+__all__ = ["AdafactorConfig", "adafactor_init", "adafactor_update",
+           "AdamWConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_schedule",
+           "compress_int8", "decompress_int8", "compressed_psum",
+           "ErrorFeedback"]

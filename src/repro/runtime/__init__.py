@@ -1,0 +1,5 @@
+from .fault import (FailureInjector, StragglerMonitor, run_with_restarts)
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["FailureInjector", "StragglerMonitor", "run_with_restarts",
+           "Trainer", "TrainerConfig"]

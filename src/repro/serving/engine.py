@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + decode over the shared model defs.
+
+Continuous-batching-lite: requests are admitted into fixed slots of a
+[batch, max_len] KV cache; prefill runs the train-path forward to populate
+the cache (chunked), decode steps advance all active slots together.  The
+same serve_step lowered by the dry-run is the step served here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, init_cache, serve_step
+from ..models import transformer as T
+from ..models import layers
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 1024
+    temperature: float = 0.0       # 0 → greedy
+
+
+class ServingEngine:
+    def __init__(self, params, model_cfg: ModelConfig, cfg: ServeConfig):
+        self.params = params
+        self.mcfg = model_cfg
+        self.cfg = cfg
+        self.cache = init_cache(model_cfg, cfg.batch_slots, cfg.max_len)
+        self._step = jax.jit(
+            lambda p, c, t, pos: serve_step(p, model_cfg, c, t, pos))
+
+    def prefill(self, prompts: np.ndarray) -> Tuple[jnp.ndarray, int]:
+        """prompts: [batch_slots, P] int32.  Sequentially decodes the prompt
+        into the cache (teacher forcing); returns logits after last token.
+
+        (Chunked prefill via the train path is the TPU-efficient variant;
+        sequential prefill keeps the engine simple and exercises the same
+        serve_step the dry-run lowers.)
+        """
+        P = prompts.shape[1]
+        logits = None
+        for t in range(P):
+            self.cache, logits = self._step(
+                self.params, self.cache, jnp.asarray(prompts[:, t:t + 1]),
+                jnp.int32(t))
+        return logits, P
+
+    def generate(self, prompts: np.ndarray, max_new: int = 32,
+                 rng: Optional[jax.Array] = None) -> np.ndarray:
+        logits, pos = self.prefill(prompts)
+        outs: List[np.ndarray] = []
+        tok = self._sample(logits, rng, 0)
+        for i in range(max_new):
+            outs.append(np.asarray(tok))
+            self.cache, logits = self._step(
+                self.params, self.cache, tok[:, None], jnp.int32(pos + i))
+            tok = self._sample(logits, rng, i + 1)
+        return np.stack(outs, axis=1)
+
+    def _sample(self, logits: jnp.ndarray, rng, salt: int) -> jnp.ndarray:
+        if self.cfg.temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(rng, salt)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)

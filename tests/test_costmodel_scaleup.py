@@ -1,0 +1,90 @@
+"""Cost model + scale-up advisor properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALVEO_U55C, ResourceProfile, RooflineTerms, Task,
+                        TaskGraph, fpga_ring_cluster, graph_intensity,
+                        lm_pod_strategy, linear_graph, partition,
+                        plan_scaleup, roofline, simulate)
+
+
+def test_roofline_dominant():
+    t = roofline(hlo_flops=197e12, hlo_bytes=0, ici_bytes=0, dcn_bytes=0,
+                 chips=1)
+    assert t.dominant == "compute" and abs(t.compute_s - 1.0) < 1e-9
+    t = roofline(hlo_flops=0, hlo_bytes=819e9, ici_bytes=0, dcn_bytes=0,
+                 chips=1)
+    assert t.dominant == "memory"
+    t = roofline(hlo_flops=0, hlo_bytes=0, ici_bytes=50e9, dcn_bytes=0,
+                 chips=1)
+    assert t.dominant == "collective"
+
+
+def test_dcn_more_expensive_than_ici():
+    a = roofline(0, 0, ici_bytes=1e9, dcn_bytes=0, chips=1)
+    b = roofline(0, 0, ici_bytes=0, dcn_bytes=1e9, chips=1)
+    assert b.collective_s > a.collective_s
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1.0, 1e4))
+def test_scaleup_ridge_rule(intensity):
+    """Below the device ridge → widen memory; above → replicate compute."""
+    g = TaskGraph("t")
+    g.add_task(Task("a", ResourceProfile({"LUT": 1.0}), hbm_bytes=1e6,
+                    meta={"ops": intensity * 1e6}))
+    cl = fpga_ring_cluster(4)
+    plan = plan_scaleup(g, cl, 4)
+    ridge = cl.device.peak_flops / cl.device.hbm_bandwidth
+    if intensity < ridge:
+        assert plan.mode == "widen-memory"
+        assert plan.port_bits >= 512
+    else:
+        assert plan.mode == "replicate-compute"
+        assert plan.replication > 1
+
+
+def test_lm_pod_strategy_memory_gate():
+    # Model state larger than a pod → pipeline parallelism.
+    assert lm_pod_strategy(2e12, 0, 0, 2, 16 * 2**30, 256, 6.25e9,
+                           1.0) == "pp"
+    # Small model, fast step → DP only if grad traffic fits the budget.
+    assert lm_pod_strategy(2e9, 0, 0, 2, 16 * 2**30, 256, 6.25e9,
+                           1.0) == "dp"
+
+
+def test_simulate_more_devices_not_slower_for_parallel_graph():
+    """Independent tasks (KNN-like): makespan non-increasing in devices."""
+    def star(n_tasks):
+        g = TaskGraph("star")
+        g.add_task(Task("agg", ResourceProfile({"LUT": 1.0}),
+                        meta={"cycles": 10.0}))
+        for i in range(n_tasks):
+            g.add_task(Task(f"w{i}", ResourceProfile({"LUT": 10.0}),
+                            hbm_bytes=1e9, meta={"cycles": 1e6}))
+            g.add_channel(f"w{i}", "agg", 64, bytes_per_step=80.0)
+        return g
+
+    times = []
+    for ndev in (1, 2, 4):
+        g = star(8)
+        cl = fpga_ring_cluster(ndev)
+        p = partition(g, cl, balance_kind="LUT",
+                      balance_tol=0.9 if ndev > 1 else 0.99)
+        res = simulate(g, p, cl, {d: 300e6 for d in range(ndev)})
+        times.append(res.makespan)
+    assert times[2] <= times[1] <= times[0] * 1.01
+
+
+def test_overlap_helps():
+    g = linear_graph(4, width_bits=512, area={"LUT": 10.0})
+    for i, t in enumerate(g.tasks.values()):
+        t.meta["cycles"] = 1e6
+    for c in g.channels:
+        c.bytes_per_step = 100e6
+    cl = fpga_ring_cluster(4)
+    p = partition(g, cl, balance_kind="LUT", balance_tol=0.2)
+    freqs = {d: 300e6 for d in range(4)}
+    with_ov = simulate(g, p, cl, freqs, overlap=True)
+    without = simulate(g, p, cl, freqs, overlap=False)
+    assert with_ov.makespan <= without.makespan

@@ -1,0 +1,67 @@
+"""Intra-device floorplanning (Eq. 4) + interconnect pipelining (C5)."""
+import numpy as np
+import pytest
+
+from repro.core import (ALVEO_U55C, SlotGrid, U55C_GRID, fpga_ring_cluster,
+                        floorplan_device, linear_graph, partition,
+                        pipeline_interconnect, verify_balanced,
+                        ResourceProfile, Task, TaskGraph)
+
+
+def test_floorplan_slot_capacity():
+    g = linear_graph(6, width_bits=128, area={"LUT": 50000, "DSP": 100})
+    fp = floorplan_device(g, g.task_names(), ALVEO_U55C.resources)
+    assert fp.grid.num_slots == 6
+    caps = ALVEO_U55C.resources["LUT"] / 6 * 0.70
+    for s in range(6):
+        assert fp.usage[s, fp.kinds.index("LUT")] <= caps + 1e-6
+
+
+def test_floorplan_chain_adjacent():
+    g = linear_graph(4, width_bits=512, area={"LUT": 150000})
+    fp = floorplan_device(g, g.task_names(), ALVEO_U55C.resources)
+    # Chain should占 adjacent slots: wirelength = 3 hops × 512.
+    assert fp.wirelength <= 3 * 512
+
+
+def test_hbm_task_binding():
+    """HBM-reading tasks prefer HBM-adjacent rows (§4.5 channel binding)."""
+    g = TaskGraph("hbm")
+    for i in range(4):
+        g.add_task(Task(f"t{i}", ResourceProfile({"LUT": 1000.0})))
+    g.add_channel("t0", "t1", 64)
+    g.add_channel("t1", "t2", 64)
+    g.add_channel("t2", "t3", 64)
+    fp = floorplan_device(g, g.task_names(), ALVEO_U55C.resources,
+                          hbm_tasks=["t0"])
+    row0_slots = {fp.grid.slot_id(0, c) for c in range(fp.grid.cols)}
+    assert fp.slot_of["t0"] in row0_slots
+
+
+def test_pipeline_balancing_reconvergent():
+    """Fork/join with unequal paths must be buffered equal (cut-set rule)."""
+    g = TaskGraph("fork")
+    for n in ("src", "a", "b1", "b2", "join"):
+        g.add_task(Task(n, ResourceProfile({"LUT": 10.0})))
+    g.add_channel("src", "a", 64)          # short path: src→a→join
+    g.add_channel("a", "join", 64)
+    g.add_channel("src", "b1", 64)         # long path: src→b1→b2→join
+    g.add_channel("b1", "b2", 64)
+    g.add_channel("b2", "join", 64)
+    cl = fpga_ring_cluster(2)
+    p = partition(g, cl)
+    rep = pipeline_interconnect(g, p, cluster=cl)
+    assert verify_balanced(g, rep)
+    assert all(d >= 2 for d in rep.depth.values())
+
+
+def test_crossing_depth_scales_with_distance():
+    g = linear_graph(4, width_bits=64, area={"LUT": 10.0})
+    cl = fpga_ring_cluster(4)
+    p = partition(g, cl, balance_kind="LUT", balance_tol=0.1)
+    rep = pipeline_interconnect(g, p, cluster=cl)
+    # cross-device channels carry at least dist+1 register stages
+    for i, c in enumerate(g.channels):
+        d1, d2 = p.assignment[c.src], p.assignment[c.dst]
+        if d1 != d2:
+            assert rep.added_latency[i] >= cl.topology.dist(d1, d2) + 1

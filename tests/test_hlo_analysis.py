@@ -1,0 +1,65 @@
+"""HLO collective parser: shapes, trip-count multipliers, DCN classification."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (CollectiveOp, collective_bytes,
+                                       cpu_bf16_convert_bytes,
+                                       parse_collectives, _is_dcn)
+
+HLO = """
+  %all-gather = f32[32,256]{0,1} all-gather(%copy), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}, metadata={op_name="jit(f)/while/body/dot_general"}
+  %all-reduce.1 = bf16[1024]{0} all-reduce(%x), channel_id=2, replica_groups={{0,256},{1,257}}, metadata={op_name="jit(f)/reduce_sum"}
+  %all-reduce.2 = f32[16,512,151936]{2,1,0} all-reduce(%y), channel_id=3, replica_groups=[16,16]<=[256], metadata={op_name="jit(f)/while/body/logsumexp"}
+  %collective-permute = bf16[8,128]{1,0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1}}, metadata={op_name="jit(f)/ppermute"}
+  %all-to-all-start = f32[64,64]{1,0} all-to-all(%w), channel_id=5, replica_groups=[4,2]<=[2,4]T(1,0), metadata={op_name="jit(f)/while/body/while/body/a2a"}
+"""
+
+
+def test_parse_finds_all():
+    ops = parse_collectives(HLO, num_superblocks=10, seq_len=4096,
+                            vocab=151936, chips_per_pod=256)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-reduce",
+                     "all-to-all", "collective-permute"]
+
+
+def test_trip_count_multipliers():
+    ops = parse_collectives(HLO, num_superblocks=10, seq_len=4096,
+                            vocab=151936, chips_per_pod=256, inner_trip=4)
+    by_kind = {(o.kind, o.while_depth): o for o in ops}
+    assert by_kind[("all-gather", 1)].trip_mult == 10       # layer scan
+    assert by_kind[("all-reduce", 0)].trip_mult == 1        # top level
+    # vocab-sized op inside a while → xent chunk count = 4096/512
+    vocab_op = [o for o in ops if 151936 in o.shape][0]
+    assert vocab_op.trip_mult == 8
+    # depth-2 op → superblocks × inner
+    assert by_kind[("all-to-all", 2)].trip_mult == 40
+
+
+def test_dcn_classification():
+    # explicit groups mixing pods
+    assert _is_dcn("replica_groups={{0,256},{1,257}}", 256)
+    assert not _is_dcn("replica_groups={{0,1},{2,3}}", 256)
+    # iota covering 512 devices with stride-256 partners (pod axis)
+    assert _is_dcn("replica_groups=[256,2]<=[2,256]T(1,0)", 256)
+    # iota within one pod
+    assert not _is_dcn("replica_groups=[2,4]<=[8]", 256)
+
+
+def test_collective_byte_aggregation():
+    ops = [CollectiveOp("all-reduce", "f32", (100,), 400.0, 0, 2.0, False,
+                        ""),
+           CollectiveOp("all-gather", "bf16", (100,), 200.0, 0, 1.0, True,
+                        "")]
+    agg = collective_bytes(ops)
+    assert agg["ici"] == 400.0 * 2 * 2          # mult × all-reduce factor
+    assert agg["dcn"] == 200.0
+
+
+def test_cpu_convert_detection():
+    txt = """
+%wrapped_convert_computation (param_0.185: bf16[60,8,2048,8,128]) -> f32[60,8,2048,8,128] {
+%other (param_0: bf16[4,4]) -> f32[4,4] {
+"""
+    got = cpu_bf16_convert_bytes(txt)
+    assert got == 60 * 8 * 2048 * 8 * 128 * 4   # big one only

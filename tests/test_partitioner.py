@@ -1,0 +1,110 @@
+"""Inter-device ILP partitioner (Eq. 1–2): exactness, constraints, pins."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Cluster, DaisyChain, DeviceSpec, ILPError,
+                        ResourceProfile, Ring, Task, TaskGraph,
+                        fpga_ring_cluster, linear_graph, partition)
+
+
+def small_cluster(n=2, lut=100.0, thresh=0.7):
+    dev = DeviceSpec("d", {"LUT": lut})
+    return Cluster(dev, Ring(n), utilization_threshold=thresh)
+
+
+def test_chain_partition_is_contiguous():
+    g = linear_graph(8, width_bits=512, area={"LUT": 30.0})
+    cl = small_cluster(2, lut=200.0)
+    p = partition(g, cl)
+    # A chain min-cut over 2 devices cuts exactly one edge.
+    assert len(p.cut_channels) == 1
+    assert p.comm_cost == 512.0
+
+
+def test_capacity_constraint_respected():
+    g = linear_graph(6, width_bits=64, area={"LUT": 50.0})
+    cl = small_cluster(2, lut=250.0, thresh=0.8)   # cap 200/device
+    p = partition(g, cl)
+    for d in range(2):
+        used = sum(50.0 for t in p.device_tasks(d))
+        assert used <= 200.0 + 1e-6
+
+
+def test_infeasible_raises():
+    g = linear_graph(4, area={"LUT": 100.0})
+    cl = small_cluster(2, lut=100.0, thresh=0.5)   # 50 cap <任 one task
+    with pytest.raises(ILPError):
+        partition(g, cl)
+
+
+def test_pins_respected():
+    g = linear_graph(6, width_bits=64, area={"LUT": 10.0})
+    cl = small_cluster(2, lut=500.0)
+    p = partition(g, cl, pins={"t0": 1, "t5": 0})
+    assert p.assignment["t0"] == 1
+    assert p.assignment["t5"] == 0
+
+
+def test_not_always_min_cut_under_congestion():
+    """Paper §4.3: a module moves off-chip when keeping it local would
+    violate the threshold, even at higher comm cost."""
+    g = TaskGraph("cong")
+    for i in range(4):
+        g.add_task(Task(f"t{i}", ResourceProfile({"LUT": 60.0})))
+    # all tightly connected: min-cut would keep them together
+    for i in range(3):
+        g.add_channel(f"t{i}", f"t{i+1}", width_bits=1024)
+    cl = small_cluster(2, lut=200.0, thresh=0.9)   # cap 180 → max 3 tasks
+    p = partition(g, cl)
+    sizes = sorted(len(p.device_tasks(d)) for d in range(2))
+    assert sizes == [1, 3]          # forced off-chip placement
+    assert p.comm_cost > 0
+
+
+def test_balance_band():
+    g = linear_graph(8, width_bits=8, area={"LUT": 10.0})
+    cl = small_cluster(2, lut=500.0)
+    p = partition(g, cl, balance_kind="LUT", balance_tol=0.1)
+    counts = [len(p.device_tasks(d)) for d in range(2)]
+    assert counts == [4, 4]
+
+
+def test_four_device_ring_chain():
+    g = linear_graph(16, width_bits=512, area={"LUT": 10.0})
+    cl = fpga_ring_cluster(4)
+    p = partition(g, cl, balance_kind="LUT", balance_tol=0.3)
+    # 3 cuts for a chain over 4 devices, each to an adjacent ring slot.
+    assert len(p.cut_channels) == 3
+    for c in p.cut_channels:
+        d1, d2 = p.assignment[c.src], p.assignment[c.dst]
+        assert cl.topology.dist(d1, d2) == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 10), st.integers(2, 3), st.data())
+def test_random_graphs_satisfy_eq1(n_tasks, n_dev, data):
+    g = TaskGraph("rand")
+    for i in range(n_tasks):
+        g.add_task(Task(f"t{i}", ResourceProfile(
+            {"LUT": data.draw(st.floats(1.0, 40.0))})))
+    for i in range(n_tasks - 1):
+        g.add_channel(f"t{i}", f"t{i+1}",
+                      data.draw(st.integers(8, 1024)))
+    # random extra forward edges (DAG)
+    for _ in range(data.draw(st.integers(0, 4))):
+        a = data.draw(st.integers(0, n_tasks - 2))
+        b = data.draw(st.integers(a + 1, n_tasks - 1))
+        g.add_channel(f"t{a}", f"t{b}", 64)
+    cl = small_cluster(n_dev, lut=200.0, thresh=0.9)
+    p = partition(g, cl)
+    # every task assigned exactly once, Eq. 1 holds per device
+    assert set(p.assignment) == set(g.task_names())
+    for d in range(n_dev):
+        used = sum(g.tasks[t].area["LUT"] for t in p.device_tasks(d))
+        assert used <= 180.0 + 1e-6
+    # objective consistency
+    recomputed = sum(cl.comm_cost(p.assignment[c.src],
+                                  p.assignment[c.dst], c.width_bits)
+                     for c in g.channels)
+    assert recomputed == pytest.approx(p.comm_cost)

@@ -1,0 +1,190 @@
+"""Substrate: optimizer, compression, checkpoint, data pipeline, fault
+tolerance, serving."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.data import DataConfig, make_pipeline
+from repro.optim import (AdafactorConfig, AdamWConfig, adafactor_init,
+                         adafactor_update, adamw_init, adamw_update,
+                         compress_int8, decompress_int8, ErrorFeedback)
+from repro.runtime import FailureInjector, StragglerMonitor, run_with_restarts
+
+RNG = jax.random.PRNGKey(0)
+
+
+# -- optimizers ---------------------------------------------------------------
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+def test_adamw_converges():
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = jax.grad(quad_loss)(params)
+        params, state = adamw_update(params, g, state, cfg)
+        state = {k: state[k] for k in ("mu", "nu", "count")}
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_adafactor_converges():
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    state = adafactor_init(params)
+    cfg = AdafactorConfig(lr=0.3)
+    for _ in range(300):
+        g = jax.grad(quad_loss)(params)
+        params, state = adafactor_update(params, g, state, cfg)
+    assert float(quad_loss(params)) < 5e-2
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32))}
+    state = adafactor_init(params)
+    leaves = state["v"]["w"]
+    assert leaves["vr"].shape == (64,)
+    assert leaves["vc"].shape == (32,)
+
+
+# -- compression --------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 1e3))
+def test_int8_quant_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = compress_int8(x)
+    deq = decompress_int8(q, s)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(deq - x))) <= amax / 127.0 + 1e-6
+
+
+def test_error_feedback_beats_plain_quantization():
+    """EF residual carry makes the accumulated (compressed) sum track the
+    true sum more closely than memoryless quantization."""
+    g = jax.random.normal(RNG, (256,)) * 0.01
+    res = {"g": jnp.zeros((256,))}
+    acc_ef = jnp.zeros((256,))
+    acc_plain = jnp.zeros((256,))
+    true = jnp.zeros((256,))
+    for i in range(50):
+        gi = g * (1 + 0.1 * i)
+        true += gi
+        out, res = ErrorFeedback.apply({"g": gi}, res)
+        acc_ef += out["g"]
+        q, s = compress_int8(gi)
+        acc_plain += decompress_int8(q, s)
+    assert float(jnp.linalg.norm(acc_ef - true)) <= \
+        float(jnp.linalg.norm(acc_plain - true)) + 1e-5
+
+
+# -- checkpointing ------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree)
+        like = jax.tree.map(jnp.zeros_like, tree)
+        got, step = load_checkpoint(d, like)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_and_latest():
+    tree = {"x": jnp.ones((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, save_interval=1)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree, blocking=True)
+        mgr.wait()
+        kept = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+        assert kept == ["step_3", "step_4"]
+        assert mgr.latest_step() == 4
+
+
+def test_checkpoint_atomicity_tmp_ignored():
+    tree = {"x": jnp.ones((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        os.makedirs(os.path.join(d, "step_9.tmp"))   # simulated crash
+        mgr = CheckpointManager(d)
+        assert mgr.latest_step() == 1
+
+
+# -- data pipeline -------------------------------------------------------------
+
+def test_pipeline_host_sharding_disjoint_and_deterministic():
+    def batches(host, n=2):
+        cfg = DataConfig(global_batch=8, seq_len=16, vocab=100,
+                         host_index=host, num_hosts=2, seed=5)
+        p = make_pipeline(cfg)
+        out = [next(iter(p)) for _ in range(n)]
+        p.close()
+        return out
+    a0, a1 = batches(0), batches(1)
+    b0 = batches(0)
+    for x, y in zip(a0, b0):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])  # determinism
+    assert not np.array_equal(a0[0]["tokens"], a1[0]["tokens"])  # disjoint
+    assert a0[0]["tokens"].shape == (4, 16)                      # host slice
+
+
+def test_pipeline_vision_weights_mask():
+    cfg = DataConfig(global_batch=2, seq_len=16, vocab=100,
+                     frontend_tokens=4, d_model=8)
+    b = next(iter(make_pipeline(cfg)))
+    assert b["frontend"].shape == (2, 4, 8)
+    assert np.all(b["weights"][:, :4] == 0)      # patch positions unmasked
+    assert np.all(b["weights"][:, 4:] == 1)
+
+
+# -- fault tolerance -----------------------------------------------------------
+
+def test_injector_and_supervisor():
+    inj = FailureInjector([3])
+    calls = []
+
+    def attempt(n):
+        calls.append(n)
+        for s in range(1, 6):
+            inj.check(s)
+        return 5
+
+    assert run_with_restarts(attempt, max_restarts=2) == 5
+    assert calls == [0, 1]          # one restart
+
+
+def test_supervisor_exhausts():
+    inj = FailureInjector([1])
+
+    def attempt(n):
+        inj.fired.clear()           # keep failing
+        inj.check(1)
+        return 1
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(attempt, max_restarts=2)
+
+
+def test_straggler_monitor_flags():
+    import time
+    mon = StragglerMonitor(alpha=0.5, threshold=1.5)
+    for i in range(3):
+        mon.start()
+        time.sleep(0.01)
+        mon.stop(i)
+    mon.start()
+    time.sleep(0.1)                  # 10× slower step
+    assert mon.stop(99) is True
+    assert 99 in mon.flagged

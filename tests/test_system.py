@@ -1,0 +1,127 @@
+"""End-to-end system behaviour: the full TAPA-CS pipeline on a real model
+graph, train-to-convergence on a tiny task, checkpoint-restart equivalence,
+and serving consistency."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (ALVEO_U55C, floorplan_device, fpga_ring_cluster,
+                        partition, pipeline_interconnect, simulate,
+                        tpu_pod_cluster, verify_balanced)
+from repro.launch.graphs import build_lm_graph
+from repro.models import init_params, train_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def test_full_tapa_cs_pipeline_on_lm_graph():
+    """graph -> partition -> pipeline -> simulate on qwen3 over 2 TPU pods."""
+    cfg = get_arch("qwen3-4b").full()
+    g = build_lm_graph(cfg, 256, 4096, state_mult=6.0)
+    for t in g.tasks.values():
+        t.area = type(t.area)({"hbm_bytes": t.area["hbm_bytes"] / 1e9,
+                               "flops": t.area["flops"] / 1e12})
+    cl = tpu_pod_cluster(2)
+    tot = sum(t.area["flops"] for t in g.tasks.values())
+    cl.device.resources["hbm_bytes"] = 16 * 256
+    cl.device.resources["flops"] = 2 * tot
+    p = partition(g, cl, balance_kind="flops", balance_tol=0.5,
+                  exact_limit=2000)
+    assert p.num_devices() == 2
+    rep = pipeline_interconnect(g, p, cluster=cl)
+    assert verify_balanced(g, rep)
+    res = simulate(g, p, cl, {0: 1.0, 1: 1.0})
+    assert res.makespan > 0
+
+
+def test_training_reduces_loss():
+    cfg = get_arch("qwen3-4b").smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=3e-3)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1),
+             "weights": jnp.ones_like(toks, jnp.float32)}
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(
+            lambda p: train_loss(p, cfg, batch))(params)
+        params, new = adamw_update(params, g, opt, ocfg)
+        return params, {k: new[k] for k in ("mu", "nu", "count")}, loss
+
+    losses = []
+    for _ in range(30):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+
+
+def test_checkpoint_restart_bitexact():
+    """Training N steps straight == training with a mid save/restore."""
+    from repro.ckpt import load_checkpoint, save_checkpoint
+    cfg = get_arch("chatglm3-6b").smoke()
+    ocfg = AdamWConfig(lr=1e-3)
+    data = jax.random.randint(jax.random.PRNGKey(2), (6, 2, 16), 0,
+                              cfg.vocab)
+
+    @jax.jit
+    def step(state, toks):
+        batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1),
+                 "weights": jnp.ones_like(toks, jnp.float32)}
+        loss, g = jax.value_and_grad(
+            lambda p: train_loss(p, cfg, batch))(state["params"])
+        params, new = adamw_update(state["params"], g, state["opt"], ocfg)
+        return {"params": params,
+                "opt": {k: new[k] for k in ("mu", "nu", "count")}}, loss
+
+    def init():
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        return {"params": p, "opt": adamw_init(p)}
+
+    s = init()
+    for i in range(6):
+        s, _ = step(s, data[i])
+    straight = s
+
+    s = init()
+    for i in range(3):
+        s, _ = step(s, data[i])
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, s)
+        s, _ = load_checkpoint(d, jax.tree.map(jnp.zeros_like, s))
+    for i in range(3, 6):
+        s, _ = step(s, data[i])
+
+    for a, b in zip(jax.tree.leaves(straight["params"]),
+                    jax.tree.leaves(s["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_serving_matches_manual_decode():
+    from repro.models import init_cache, serve_step
+    from repro.serving import ServeConfig, ServingEngine
+    cfg = get_arch("qwen3-4b").smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.array([[5, 6, 7], [8, 9, 10]], np.int32)
+    eng = ServingEngine(params, cfg, ServeConfig(batch_slots=2, max_len=32))
+    out = eng.generate(prompts, max_new=5)
+
+    cache = init_cache(cfg, 2, 32)
+    logits = None
+    for t in range(3):
+        cache, logits = serve_step(params, cfg, cache,
+                                   jnp.asarray(prompts[:, t:t + 1]),
+                                   jnp.int32(t))
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(5):
+        toks.append(np.asarray(tok))
+        cache, logits = serve_step(params, cfg, cache, tok[:, None],
+                                   jnp.int32(3 + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    np.testing.assert_array_equal(out, np.stack(toks, 1))

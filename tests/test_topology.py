@@ -1,0 +1,67 @@
+"""Topology dist() properties (paper Eq. 3 + variants) — unit + property."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Bus, DaisyChain, Hypercube, Mesh2D, Ring, Star,
+                        lam, ETHERNET_100G, PCIE_GEN3X16, TPU_DCN, TPU_ICI)
+
+TOPOS = [
+    lambda n: DaisyChain(n),
+    lambda n: Ring(n),
+    lambda n: Bus(n),
+    lambda n: Star(n),
+    lambda n: Mesh2D(2, (n + 1) // 2),
+    lambda n: Hypercube(max(1, (n - 1).bit_length())),
+]
+
+
+def test_daisy_chain_matches_eq3():
+    t = DaisyChain(4)
+    assert t.dist(0, 3) == 3
+    assert t.dist(2, 1) == 1
+
+
+def test_ring_matches_paper():
+    t = Ring(4)                      # paper testbed: 4-FPGA ring
+    assert t.dist(0, 3) == 1         # wraps
+    assert t.dist(0, 2) == 2
+    assert t.diameter() == 2
+
+
+def test_lambda_scaling_pcie():
+    # §4.3: PCIe Gen3x16 cost scaled 12.5× vs Ethernet.
+    assert lam(PCIE_GEN3X16) == pytest.approx(12.5)
+    assert lam(ETHERNET_100G) == pytest.approx(1.0)
+    assert lam(TPU_DCN, TPU_ICI) == pytest.approx(8.0)
+
+
+def test_hypercube():
+    t = Hypercube(3)
+    assert t.dist(0b000, 0b111) == 3
+    assert t.diameter() == 3
+
+
+def test_mesh_torus_wrap():
+    m = Mesh2D(4, 4, torus=True)
+    assert m.dist(0, 3) == 1         # column wrap
+    assert m.dist(0, 12) == 1        # row wrap
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 5), st.integers(2, 10), st.integers(0, 100),
+       st.integers(0, 100))
+def test_metric_properties(kind, n, a, b):
+    topo = TOPOS[kind](n)
+    i, j = a % topo.num_devices, b % topo.num_devices
+    assert topo.dist(i, i) == 0
+    assert topo.dist(i, j) == topo.dist(j, i)        # symmetry
+    assert topo.dist(i, j) >= 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 200), st.integers(0, 200),
+       st.integers(0, 200))
+def test_ring_triangle_inequality(n, a, b, c):
+    t = Ring(n)
+    i, j, k = a % n, b % n, c % n
+    assert t.dist(i, k) <= t.dist(i, j) + t.dist(j, k)
