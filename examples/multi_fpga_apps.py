@@ -1,25 +1,24 @@
-"""The paper's four benchmarks through the full TAPA-CS pipeline:
-graph → ILP partition → floorplan → pipelining → schedule simulation →
-runnable Pallas numerics at reduced scale.
+"""The paper's four benchmarks through the full TAPA-CS compiler pipeline
+(one repro.compiler.compile() call per app: partition → floorplan →
+pipelining → schedule simulation) → runnable Pallas numerics at reduced
+scale.
 
 Run:  PYTHONPATH=src python examples/multi_fpga_apps.py
 """
 import numpy as np
 
 from repro.apps import cnn, knn, pagerank, stencil
-from repro.core import (ALVEO_U55C, floorplan_device, fpga_ring_cluster,
-                        partition, pipeline_interconnect, simulate)
+from repro.compiler import CompileOptions, compile as tapa_compile
+from repro.core import fpga_ring_cluster
 
 
 def run_app(name, mod, build_kwargs=None, ndev=4):
     g = mod.build_graph(ndev, **(build_kwargs or {}))
     cl = fpga_ring_cluster(ndev)
-    p = partition(g, cl, balance_kind="LUT", balance_tol=0.8)
-    fps = {d: floorplan_device(g, p.device_tasks(d), ALVEO_U55C.resources)
-           for d in range(ndev) if p.device_tasks(d)}
-    rep = pipeline_interconnect(g, p, fps, cl)
     freq = getattr(mod, "FREQS", {"FCS": 300e6}).get("FCS", 300e6)
-    res = simulate(g, p, cl, {d: freq for d in range(ndev)})
+    design = tapa_compile(g, cl, CompileOptions(
+        balance_kind="LUT", balance_tol=0.8, freq_hz=freq))
+    p, rep, res = design.partition, design.pipeline_report, design.schedule
     print(f"{name:9s} modules={len(g.tasks):4d} cut={len(p.cut_channels):3d} "
           f"crossings={rep.num_crossings:3d} "
           f"makespan={res.makespan*1e3:9.1f} ms "

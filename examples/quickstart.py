@@ -1,9 +1,11 @@
 """Quickstart: the TAPA-CS flow end-to-end on one page.
 
 1. Express a workload as a task graph (here: the paper's KNN app).
-2. Partition it across a 4-FPGA ring with the ILP partitioner (Eq. 1-2).
-3. Floorplan one device into slots (Eq. 4) + pipeline the interconnect (C5).
-4. Train a small LM for a few steps with the same machinery underneath.
+2. Compile it onto a 4-FPGA ring with ONE call — repro.compiler.compile()
+   runs the whole pass pipeline: unit normalization, ILP partition
+   (Eq. 1-2), per-device floorplan (Eq. 4), interconnect pipelining (C5),
+   and the cost-model schedule.
+3. Train a small LM for a few steps with the same machinery underneath.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,9 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps import knn as knn_app
-from repro.core import (ALVEO_U55C, floorplan_device, fpga_ring_cluster,
-                        partition, pipeline_interconnect, simulate,
-                        verify_balanced)
+from repro.compiler import CompileOptions, compile as tapa_compile
+from repro.core import fpga_ring_cluster, verify_balanced
 
 
 def tapa_cs_flow():
@@ -22,28 +23,33 @@ def tapa_cs_flow():
     print("=" * 60)
     g = knn_app.build_graph(ndev=4, n_points=4_000_000, dim=16)
     cl = fpga_ring_cluster(4)
-    # 1) inter-FPGA ILP partition (Eq. 1-2)
-    p = partition(g, cl, balance_kind="LUT", balance_tol=0.8)
+    # One entry point for the whole flow.  hbm_tasks are softly pinned to
+    # HBM-adjacent rows; floorplan_devices=(0,) keeps the example quick
+    # (drop it to floorplan every FPGA).
+    opts = CompileOptions(
+        balance_kind="LUT", balance_tol=0.8,
+        hbm_tasks=tuple(t for t in g.tasks if t.startswith("dist")),
+        floorplan_devices=(0,),
+        freq_hz=knn_app.FREQS["FCS"])
+    design = tapa_compile(g, cl, opts)
+
+    p = design.partition
     for d in range(4):
         tasks = p.device_tasks(d)
         print(f"  FPGA {d}: {len(tasks)} modules "
               f"({', '.join(tasks[:4])}{'...' if len(tasks) > 4 else ''})")
     print(f"  cut channels: {len(p.cut_channels)}, "
           f"comm cost (Eq.2): {p.comm_cost:.0f}")
-    # 2) intra-FPGA floorplan (Eq. 4) for FPGA 0
-    fp = floorplan_device(g, p.device_tasks(0), ALVEO_U55C.resources,
-                          hbm_tasks=[t for t in p.device_tasks(0)
-                                     if t.startswith("dist")])
+    fp = design.floorplans[0]
     print(f"  FPGA0 floorplan: wirelength {fp.wirelength:.0f}, "
           f"{fp.grid.num_slots} slots")
-    # 3) interconnect pipelining + cut-set balancing
-    rep = pipeline_interconnect(g, p, {0: fp}, cl)
+    rep = design.pipeline_report
     print(f"  pipelined {rep.num_crossings} crossings "
           f"(max {rep.max_crossing} stages); balanced: "
           f"{verify_balanced(g, rep)}")
-    # 4) schedule simulation
-    res = simulate(g, p, cl, {d: 220e6 for d in range(4)})
-    print(f"  simulated makespan: {res.makespan * 1e3:.1f} ms")
+    print(f"  simulated makespan: {design.schedule.makespan * 1e3:.1f} ms")
+    print(f"  pass times: "
+          f"{ {r.name: round(r.wall_time_s, 2) for r in design.pass_records} }")
     print(f"  modeled speedups vs Vitis: "
           f"{ {k: round(v, 2) for k, v in knn_app.speedup_table().items()} }")
 

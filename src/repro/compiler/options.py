@@ -1,0 +1,76 @@
+"""`CompileOptions` — the single, frozen configuration record for the
+TAPA-CS compiler pipeline.
+
+Every knob that used to be passed positionally to one of the legacy free
+functions (``partition`` / ``floorplan_device`` / ``pipeline_interconnect`` /
+``simulate``) or hacked in-place at a call site (the unit rescaling in
+``launch/plan.py``) lives here, grouped by the pass that consumes it.  See
+``repro.compiler`` (the package docstring) for the field-by-field reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple, Union
+
+from ..core.floorplan import SlotGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Frozen options bundle consumed by :func:`repro.compiler.compile`.
+
+    The defaults reproduce the paper's single-node FPGA flow (Eq. 1–2
+    partition, Eq. 4 floorplan, §4.6 pipelining, §5 schedule simulation).
+    """
+
+    # -- pipeline shape ----------------------------------------------------
+    # Ordered pass names; None = the default full pipeline
+    # (normalize_units, partition, floorplan, pipeline_interconnect,
+    # schedule).  Subsets compose: launch/plan.py runs without floorplan
+    # and schedule.
+    passes: Optional[Tuple[str, ...]] = None
+
+    # -- normalize_units pass ---------------------------------------------
+    # Scale per-kind areas/capacities by powers of two into a solver-safe
+    # range (HiGHS misbehaves on 1e15-scale coefficients) and scale results
+    # back.  Power-of-two factors make the round trip bit-exact.
+    normalize_units: bool = True
+    # Device-resource overrides (original units) applied to a *copy* of the
+    # cluster's DeviceSpec — e.g. pod-aggregate HBM = per-chip HBM × chips.
+    capacity_override: Optional[Mapping[str, float]] = None
+    # Kinds whose capacity is set to slack × (graph total): turns a kind
+    # into a pure balance target so Eq. 1 never binds on it.
+    relax_capacity_kinds: Tuple[str, ...] = ()
+    relax_capacity_slack: float = 2.0
+
+    # -- partition pass (Eq. 1–2) -----------------------------------------
+    balance_kind: Optional[str] = None
+    balance_tol: float = 0.35
+    pins: Optional[Mapping[str, int]] = None
+    exact_limit: int = 20000
+    partition_time_limit: float = 60.0
+
+    # -- floorplan pass (Eq. 4) -------------------------------------------
+    # None = U55C_GRID for FPGA devices, TPU_POD_GRID for tpu-* devices.
+    grid: Optional[SlotGrid] = None
+    floorplan_threshold: float = 0.70
+    # Tasks that read HBM (softly pinned to HBM-adjacent rows); filtered
+    # per device by membership.
+    hbm_tasks: Tuple[str, ...] = ()
+    floorplan_time_limit: float = 30.0
+    floorplan_strict: bool = False
+    # None = every device that received tasks.
+    floorplan_devices: Optional[Tuple[int, ...]] = None
+
+    # -- pipeline_interconnect pass (§4.6) --------------------------------
+    min_depth: int = 2
+
+    # -- schedule pass (cost model, §5) -----------------------------------
+    # None = device fmax (or 1.0 when the device has no fabric clock);
+    # a float applies to every device; a mapping is per-device.
+    freq_hz: Optional[Union[float, Mapping[int, float]]] = None
+    overlap: bool = True
+    hbm_efficiency: float = 1.0
+
+    def replace(self, **changes) -> "CompileOptions":
+        return dataclasses.replace(self, **changes)

@@ -47,6 +47,15 @@ class Partition:
         return [t for t, dd in self.assignment.items() if dd == d]
 
     def num_devices(self) -> int:
+        """True cluster size, including devices that received no tasks.
+
+        Derived from the usage matrix (one row per cluster device) rather
+        than ``max(assignment)+1``, which undercounted clusters whose
+        highest-indexed devices were left empty.
+        """
+        usage = np.asarray(self.usage)
+        if usage.ndim == 2:
+            return int(usage.shape[0])
         return int(max(self.assignment.values())) + 1 if self.assignment else 0
 
 

@@ -56,7 +56,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         "plan": {"pod_strategy": plan.pod_strategy,
                  "optimizer": plan.optimizer,
                  "param_bytes": plan.param_bytes,
-                 "rationale": plan.rationale},
+                 "rationale": plan.rationale,
+                 # Per-pass timings/stats from the repro.compiler artifact
+                 # (None for cells that never ran the partitioner).
+                 "compiler": (plan.compiled.summary()
+                              if plan.compiled is not None else None)},
         "ok": False,
     }
     try:

@@ -1,5 +1,6 @@
-"""Partition plan: the TAPA-CS pipeline (graph → ILP partition → floorplan →
-pipelining → strategy) applied to an (arch × shape × mesh) cell.
+"""Partition plan: the TAPA-CS compiler pipeline (graph → normalize →
+ILP partition → pipelining, via repro.compiler.compile) applied to an
+(arch × shape × mesh) cell.
 
 The plan records what the tool decided and why — it is consumed by steps.py
 (which optimizer, which pod strategy) and reported by dryrun.py.
@@ -11,10 +12,10 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from ..compiler import CompileOptions, CompiledDesign
+from ..compiler import compile as tapa_compile
 from ..configs.base import SHAPES
-from ..core import (TPU_POD_GRID, Cluster, Partition, TaskGraph,
-                    floorplan_device, lm_pod_strategy, partition,
-                    pipeline_interconnect, tpu_pod_cluster)
+from ..core import Partition, lm_pod_strategy, tpu_pod_cluster
 from ..core.costmodel import TPU_DCN_BW, TPU_HBM_BW, TPU_PEAK_FLOPS
 from ..models import ModelConfig
 from .graphs import build_lm_graph, total_param_bytes
@@ -35,6 +36,7 @@ class Plan:
     param_bytes: float
     state_bytes_per_chip: float
     rationale: str
+    compiled: Optional[CompiledDesign] = None
 
 
 def make_plan(arch: str, cfg: ModelConfig, shape: str,
@@ -53,6 +55,7 @@ def make_plan(arch: str, cfg: ModelConfig, shape: str,
 
     part = None
     depths = None
+    design = None
     strategy = "dp"
     rationale = ""
     if cell.kind == "train":
@@ -70,26 +73,24 @@ def make_plan(arch: str, cfg: ModelConfig, shape: str,
                      f"est step {step_s*1e3:.0f} ms")
         if num_pods > 1:
             cluster = tpu_pod_cluster(num_pods)
-            # Per-pod capacity = chips × HBM (threshold inside Cluster).
-            # Resources rescaled to GB / TFLOP so ILP coefficients stay in
-            # HiGHS's numeric range (raw 1e15-scale values → Model error).
-            for t in g.tasks.values():
-                t.area = type(t.area)({
-                    "hbm_bytes": t.area["hbm_bytes"] / 1e9,
-                    "flops": t.area["flops"] / 1e12})
-            cluster.device.resources["hbm_bytes"] = (
-                HBM_PER_CHIP * chips_per_pod / 1e9)
-            # FLOPs are a balance target, not a capacity (per-step work vs
-            # per-second throughput): set the cap above the graph total so
-            # Eq. 1 binds on memory only, and the balance band does the
-            # compute-load balancing.
-            tot_tflops = sum(t.area["flops"] for t in g.tasks.values())
-            cluster.device.resources["flops"] = 2.0 * tot_tflops
-            part = partition(g, cluster, balance_kind="flops",
-                             balance_tol=0.9,
-                             exact_limit=2000, time_limit=30.0)
-            rep = pipeline_interconnect(g, part, cluster=cluster)
-            depths = rep.depth
+            # Per-pod HBM capacity = chips × per-chip HBM; FLOPs are a
+            # balance target, not a capacity (per-step work vs per-second
+            # throughput), so the compiler relaxes that cap above the graph
+            # total and the balance band does the compute-load balancing.
+            # Unit normalization (raw 1e15-scale coefficients would trip
+            # HiGHS) happens inside the pipeline on solver-facing copies —
+            # task areas and the shared TPU_V5E DeviceSpec stay untouched.
+            opts = CompileOptions(
+                passes=("normalize_units", "partition",
+                        "pipeline_interconnect"),
+                balance_kind="flops", balance_tol=0.9,
+                exact_limit=2000, partition_time_limit=30.0,
+                capacity_override={
+                    "hbm_bytes": HBM_PER_CHIP * chips_per_pod},
+                relax_capacity_kinds=("flops",))
+            design = tapa_compile(g, cluster, opts)
+            part = design.partition
+            depths = design.pipeline_report.depth
     # Microbatch count: 8 default; 16 when optimizer state already eats
     # most of the 16 GB/chip budget (v3: state ≈ 10 GB/chip), or when the
     # arch carries sequence-scan recurrences whose backward stacks per-step
@@ -109,4 +110,4 @@ def make_plan(arch: str, cfg: ModelConfig, shape: str,
                 microbatches=microbatches, partition=part,
                 pipeline_depths=depths,
                 param_bytes=pbytes, state_bytes_per_chip=state_per_chip,
-                rationale=rationale)
+                rationale=rationale, compiled=design)

@@ -3,9 +3,13 @@ import numpy as np
 import pytest
 
 from repro.core import (ALVEO_U55C, SlotGrid, U55C_GRID, fpga_ring_cluster,
-                        floorplan_device, linear_graph, partition,
-                        pipeline_interconnect, verify_balanced,
+                        linear_graph, verify_balanced,
                         ResourceProfile, Task, TaskGraph)
+# Raw implementations: the repro.core package-level names are deprecation
+# shims (use repro.compiler.compile in new code).
+from repro.core.floorplan import floorplan_device
+from repro.core.partitioner import partition
+from repro.core.pipelining import pipeline_interconnect
 
 
 def test_floorplan_slot_capacity():

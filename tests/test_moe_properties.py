@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or skip
 
 from repro.models.moe import MoEConfig, init_moe, moe_forward, _route
 

@@ -9,9 +9,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import (ALVEO_U55C, floorplan_device, fpga_ring_cluster,
-                        partition, pipeline_interconnect, simulate,
+from repro.core import (ALVEO_U55C, fpga_ring_cluster, simulate,
                         tpu_pod_cluster, verify_balanced)
+# Raw implementations: the repro.core package-level names are deprecation
+# shims (use repro.compiler.compile in new code).
+from repro.core.partitioner import partition
+from repro.core.pipelining import pipeline_interconnect
 from repro.launch.graphs import build_lm_graph
 from repro.models import init_params, train_loss
 from repro.optim import AdamWConfig, adamw_init, adamw_update

@@ -1,6 +1,6 @@
 """Topology dist() properties (paper Eq. 3 + variants) — unit + property."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or skip
 
 from repro.core import (Bus, DaisyChain, Hypercube, Mesh2D, Ring, Star,
                         lam, ETHERNET_100G, PCIE_GEN3X16, TPU_DCN, TPU_ICI)
