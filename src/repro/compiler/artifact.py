@@ -83,6 +83,10 @@ class CompiledDesign:
             p = self.partition
             out["partition"] = {
                 "comm_cost": p.comm_cost,
+                # Same _objective evaluation as comm_cost (invariant checked
+                # by the partition pass); exported for perf trending.
+                "objective": p.stats.objective,
+                "solver_wall_time_s": round(p.stats.wall_time_s, 4),
                 "cut_channels": len(p.cut_channels),
                 "method": p.stats.method,
                 "tasks_per_device": [len(p.device_tasks(d))
@@ -92,7 +96,9 @@ class CompiledDesign:
             out["floorplans"] = {
                 str(d): {"wirelength": fp.wirelength,
                          "congested": fp.congested,
-                         "threshold_used": fp.threshold_used}
+                         "threshold_used": fp.threshold_used,
+                         "solver_wall_time_s": round(fp.stats.wall_time_s, 4),
+                         "method": fp.stats.method}
                 for d, fp in sorted(self.floorplans.items())}
         if self.pipeline_report is not None:
             rep = self.pipeline_report

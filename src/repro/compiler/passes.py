@@ -19,7 +19,7 @@ from __future__ import annotations
 import collections.abc
 import dataclasses
 import math
-from typing import Callable, Dict, Mapping, Optional
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -56,6 +56,10 @@ class CompileState:
     floorplans: Dict[int, Floorplan] = dataclasses.field(default_factory=dict)
     pipeline_report: Optional[PipelineReport] = None
     schedule: Optional[ScheduleResult] = None
+    # Per-compile() memo of solver inputs (pair-cost matrix, per-task area
+    # vectors, topological order) so the passes stop recomputing them.
+    _memo: Dict[object, object] = dataclasses.field(default_factory=dict,
+                                                    repr=False)
 
     def __post_init__(self):
         if self.work_graph is None:
@@ -65,6 +69,43 @@ class CompileState:
 
     def scale_vector(self, kinds) -> np.ndarray:
         return np.array([self.unit_scale.get(k, 1.0) for k in kinds])
+
+    # -- memoized solver inputs (valid for the lifetime of one compile()) --
+    def pair_cost_matrix(self) -> np.ndarray:
+        """dist×λ matrix of the cluster — identical for ``cluster`` and
+        ``work_cluster`` (normalization only rescales device resources)."""
+        key = ("pair_cost", id(self.work_cluster))
+        if key not in self._memo:
+            # The cluster reference in the value pins the id against reuse
+            # (a freed object's id can be recycled by a later allocation).
+            self._memo[key] = (
+                self.work_cluster,
+                _partitioner._pair_cost_matrix(self.work_cluster))
+        return self._memo[key][1]
+
+    def areas(self, kinds: Tuple[str, ...]) -> Dict[str, np.ndarray]:
+        """Per-task resource vectors of ``work_graph`` over ``kinds``.
+
+        Keyed by the work_graph identity AND the kinds tuple: normalize_units
+        may swap work_graph mid-pipeline (custom pass orders), and the
+        partition pass uses the graph's own resource kinds while the
+        floorplan pass uses the device's.  Callers must not mutate the
+        returned dict or its vectors.
+        """
+        key = ("areas", id(self.work_graph), tuple(kinds))
+        if key not in self._memo:
+            # Graph reference pins the id against reuse, as above.
+            self._memo[key] = (self.work_graph,
+                               _partitioner._areas(self.work_graph, kinds))
+        return self._memo[key][1]
+
+    def topo_order(self) -> List[str]:
+        """Topological task order — shared by the pipelining and schedule
+        passes (``work_graph`` shares the caller's channels and task order,
+        so one order serves both views)."""
+        if "topo_order" not in self._memo:
+            self._memo["topo_order"] = self.graph.topo_order()
+        return self._memo["topo_order"]
 
 
 PassFn = Callable[[CompileState], Optional[Mapping[str, object]]]
@@ -161,7 +202,15 @@ def run_partition(state: CompileState):
         balance_tol=opts.balance_tol,
         pins=dict(opts.pins) if opts.pins else None,
         exact_limit=opts.exact_limit,
-        time_limit=opts.partition_time_limit)
+        time_limit=opts.partition_time_limit,
+        pair_cost=state.pair_cost_matrix(),
+        areas=state.areas(state.work_graph.resource_kinds()))
+    # Invariant: comm_cost and stats.objective come from the same
+    # _objective evaluation — any drift means a broken Partition producer.
+    if part.stats.objective != part.comm_cost:
+        raise CompileError(
+            f"Partition.stats.objective ({part.stats.objective}) drifted "
+            f"from comm_cost ({part.comm_cost})")
     # Scale usage back to the caller's units (exact: power-of-two factors).
     if state.unit_scale:
         part = dataclasses.replace(
@@ -169,6 +218,8 @@ def run_partition(state: CompileState):
     state.partition = part
     return {"method": part.stats.method,
             "comm_cost": part.comm_cost,
+            "objective": part.stats.objective,
+            "solver_wall_time_s": part.stats.wall_time_s,
             "cut_channels": len(part.cut_channels)}
 
 
@@ -215,7 +266,8 @@ def run_floorplan(state: CompileState):
             threshold=opts.floorplan_threshold,
             hbm_tasks=[t for t in tasks if t in hbm_set],
             time_limit=opts.floorplan_time_limit,
-            strict=opts.floorplan_strict)
+            strict=opts.floorplan_strict,
+            areas=state.areas(tuple(capacity.keys())))
         if state.unit_scale:
             fp = dataclasses.replace(
                 fp, usage=fp.usage * state.scale_vector(fp.kinds))
@@ -243,7 +295,8 @@ def run_pipeline_interconnect(state: CompileState):
         state.graph, state.partition,
         floorplans=state.floorplans or None,
         cluster=state.cluster,
-        min_depth=state.options.min_depth)
+        min_depth=state.options.min_depth,
+        order=state.topo_order())
     state.pipeline_report = rep
     return {"num_crossings": rep.num_crossings,
             "max_crossing": rep.max_crossing}
@@ -269,6 +322,7 @@ def run_schedule(state: CompileState):
         freqs = {d: float(freq) for d in range(ndev)}
     state.schedule = simulate(
         state.graph, state.partition, state.cluster, freqs,
-        overlap=opts.overlap, hbm_efficiency=opts.hbm_efficiency)
+        overlap=opts.overlap, hbm_efficiency=opts.hbm_efficiency,
+        order=state.topo_order())
     return {"makespan_s": state.schedule.makespan,
             "comm_time_s": state.schedule.comm_time}

@@ -113,15 +113,18 @@ def transfer_time(ch: Channel, cluster: Cluster, d1: int, d2: int) -> float:
 def simulate(graph: TaskGraph, partition: Partition, cluster: Cluster,
              freq_hz: Dict[int, float], *,
              overlap: bool = True,
-             hbm_efficiency: float = 1.0) -> ScheduleResult:
+             hbm_efficiency: float = 1.0,
+             order: Optional[List[str]] = None) -> ScheduleResult:
     """Event-driven simulation of the partitioned dataflow graph.
 
     overlap=True models TAPA-CS streaming (transfer overlapped with the
     producer's compute — consumer waits for max(producer, transfer) from the
     producer's *start*); overlap=False serializes transfer after the producer
-    finishes (host-orchestrated baseline behaviour).
+    finishes (host-orchestrated baseline behaviour).  ``order``: optional
+    precomputed topological order (memoized by the compiler pipeline).
     """
-    order = graph.topo_order()
+    if order is None:
+        order = graph.topo_order()
     assign = partition.assignment
     # Concurrent HBM readers per device → bandwidth share (paper §3: PEs
     # sharing channels see per-PE bandwidth collapse).

@@ -23,7 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .graph import TaskGraph
-from .ilp import ILPError, Model, SolveStats, kl_refine
+from .ilp import (ILPError, Model, SolveStats, add_abs_diff_cost_vars,
+                  add_cut_cost_vars, kl_refine)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,13 +104,19 @@ def floorplan_device(graph: TaskGraph, tasks: Sequence[str],
                      threshold: float = 0.70,
                      hbm_tasks: Sequence[str] = (),
                      time_limit: float = 30.0,
-                     strict: bool = False) -> Floorplan:
+                     strict: bool = False,
+                     areas: Optional[Dict[str, np.ndarray]] = None
+                     ) -> Floorplan:
     """Floorplan the ``tasks`` resident on one device into ``grid`` slots.
 
     capacity: whole-device resources (paper Table 2); each slot gets
         capacity/num_slots × slot_scale × threshold.
     hbm_tasks: tasks that access HBM — pinned (softly) to HBM-adjacent rows,
         the paper's channel-binding consideration.
+    areas: optional precomputed per-task resource vectors over
+        ``tuple(capacity.keys())`` (may cover more tasks than ``tasks``) —
+        the compiler pipeline memoizes these per compile() so per-device
+        calls stop rebuilding them; never mutated here.
 
     Slot-level bin packing can be infeasible even when device-level Eq. 1
     holds (slot quantization wastes capacity).  Real CAD doesn't crash — it
@@ -127,24 +134,26 @@ def floorplan_device(graph: TaskGraph, tasks: Sequence[str],
              if c.src in in_set and c.dst in in_set]
     pair = np.array([[grid.dist(a, b) for b in range(nslots)]
                      for a in range(nslots)], dtype=float)
+    base_areas = ({v: np.asarray(areas[v], dtype=float) for v in tasks}
+                  if areas is not None else _areas(graph, tasks, kinds))
 
     thresholds = [threshold] if strict else [threshold, 0.85, 0.95, 1.1]
     last_err: Optional[Exception] = None
     for ti, th in enumerate(thresholds):
-        areas = _areas(graph, tasks, kinds)
         caps = np.array([[capacity[k] / nslots * grid.scale(s) * th
                           for k in kinds] for s in range(nslots)])
         # A module larger than one slot spans adjacent slots ("a single die
         # can contain any number of modules, and modules spanning across
-        # multiple dies are pipelined sufficiently" — paper §6.2).
+        # multiple dies are pipelined sufficiently" — paper §6.2).  Clamped
+        # into fresh vectors so the memoized base areas stay pristine.
         slot_min = caps.min(axis=0)
-        for v in tasks:
-            areas[v] = np.minimum(areas[v], slot_min * 0.95)
+        areas = {v: np.minimum(base_areas[v], slot_min * 0.95)
+                 for v in tasks}
         try:
             if len(tasks) * nslots <= 2000:
                 slot_of, method = _exact_slot_ilp(
                     tasks, edges, areas, kinds, grid, caps, hbm_tasks,
-                    time_limit)
+                    time_limit, pair=pair)
             else:
                 slot_of, method = _recursive_slots(
                     tasks, edges, areas, kinds, grid, caps, hbm_tasks,
@@ -167,7 +176,7 @@ def floorplan_device(graph: TaskGraph, tasks: Sequence[str],
     if strict:
         raise last_err or ILPError("floorplan infeasible")
     # Greedy congested fallback: least-loaded-slot placement.
-    areas = _areas(graph, tasks, kinds)
+    areas = base_areas
     norm = np.array([max(capacity[k] / nslots, 1e-9) for k in kinds])
     usage = np.zeros((nslots, len(kinds)))
     slot_of = {}
@@ -188,37 +197,45 @@ def floorplan_device(graph: TaskGraph, tasks: Sequence[str],
 
 
 def _exact_slot_ilp(tasks, edges, areas, kinds, grid: SlotGrid, caps,
-                    hbm_tasks, time_limit):
+                    hbm_tasks, time_limit, pair=None):
+    """Eq. 4 slot-assignment MILP, emitted through the bulk COO APIs with
+    one linearization var per unordered slot pair (Manhattan distance is
+    symmetric).  ``pair``: optional precomputed slot-distance matrix."""
     nslots = grid.num_slots
+    tasks = list(tasks)
+    nt = len(tasks)
+    tidx = {v: i for i, v in enumerate(tasks)}
     m = Model("floorplan")
-    x: Dict[Tuple[str, int], int] = {}
     hbm_slots = {grid.slot_id(r, c)
                  for r in grid.hbm_rows for c in range(grid.cols)}
     hbm_set = set(hbm_tasks)
-    for v in tasks:
+    # Soft HBM binding: tiny objective bonus for HBM tasks in HBM rows.
+    pen = np.zeros((nt, nslots))
+    for v in hbm_set & set(tasks):
+        row = 1e-3 * float(np.sum(areas[v])) + 1.0
         for s in range(nslots):
-            # Soft HBM binding: tiny objective bonus for HBM tasks in HBM rows.
-            pen = 0.0
-            if v in hbm_set and s not in hbm_slots:
-                pen = 1e-3 * sum(areas[v]) + 1.0
-            x[v, s] = m.add_binary(obj=pen)
-        m.add_eq({x[v, s]: 1.0 for s in range(nslots)}, 1.0)
-    for s in range(nslots):
-        for ki in range(len(kinds)):
-            coeffs = {x[v, s]: areas[v][ki] for v in tasks if areas[v][ki]}
-            if coeffs:
-                m.add_le(coeffs, caps[s, ki])
-    for (u, v, w) in edges:
-        for a in range(nslots):
-            for b in range(nslots):
-                d = grid.dist(a, b)
-                if a == b or d == 0:
-                    continue
-                var = m.add_var(0.0, 1.0, integer=False, obj=w * d)
-                m.add_ge({var: 1.0, x[u, a]: -1.0, x[v, b]: -1.0}, -1.0)
+            if s not in hbm_slots:
+                pen[tidx[v], s] = row
+    xstart = m.add_vars(nt * nslots, 0.0, 1.0, integer=True,
+                        obj=pen.ravel())
+    xcols = (xstart + np.arange(nt * nslots,
+                                dtype=np.intp)).reshape(nt, nslots)
+    m.add_eq_rows(xcols, np.ones((nt, nslots)), 1.0)
+    amat = np.stack([areas[v] for v in tasks]) if nt else np.zeros((0, 1))
+    if nt and kinds:
+        for s in range(nslots):
+            m.add_le_rows(np.broadcast_to(xcols[:, s], (len(kinds), nt)),
+                          amat.T, caps[s])
+    if edges:
+        if pair is None:
+            pair = np.array([[grid.dist(a, b) for b in range(nslots)]
+                             for a in range(nslots)], dtype=float)
+        e_src = np.array([tidx[u] for u, v, w in edges], dtype=np.intp)
+        e_dst = np.array([tidx[v] for u, v, w in edges], dtype=np.intp)
+        e_w = np.array([w for u, v, w in edges])
+        add_cut_cost_vars(m, xcols, e_src, e_dst, e_w, pair)
     sol = m.solve(time_limit=time_limit)
-    out = {v: int(np.argmax([sol[x[v, s]] for s in range(nslots)]))
-           for v in tasks}
+    out = {v: int(np.argmax(sol[xcols[i]])) for i, v in enumerate(tasks)}
     return out, "milp-exact"
 
 
@@ -244,11 +261,14 @@ def _recursive_slots(tasks, edges, areas, kinds, grid: SlotGrid, caps,
             if coeffs:
                 m.add_le(coeffs, cap_r[ki])
                 m.add_ge(coeffs, tot - cap_l[ki])
-        for (u, v, w) in edges:
-            if u in in_set and v in in_set:
-                y = m.add_var(0.0, 1.0, integer=False, obj=w)
-                m.add_ge({y: 1.0, side[u]: -1.0, side[v]: 1.0}, 0.0)
-                m.add_ge({y: 1.0, side[u]: 1.0, side[v]: -1.0}, 0.0)
+        in_edges = [(side[u], side[v], w) for (u, v, w) in edges
+                    if u in in_set and v in in_set]
+        if in_edges:
+            add_abs_diff_cost_vars(
+                m,
+                np.array([e[0] for e in in_edges], dtype=np.intp),
+                np.array([e[1] for e in in_edges], dtype=np.intp),
+                np.array([e[2] for e in in_edges]))
         sol = m.solve(time_limit=time_limit)
         left_t = [v for v in tset if sol[side[v]] < 0.5]
         right_t = [v for v in tset if sol[side[v]] >= 0.5]

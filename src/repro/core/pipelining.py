@@ -67,16 +67,19 @@ def pipeline_interconnect(graph: TaskGraph,
                           partition: Optional[Partition] = None,
                           floorplans: Optional[Dict[int, Floorplan]] = None,
                           cluster: Optional[Cluster] = None,
-                          min_depth: int = 2) -> PipelineReport:
+                          min_depth: int = 2,
+                          order: Optional[List[str]] = None) -> PipelineReport:
     """Assign per-channel register latency, then balance reconvergent paths.
 
     Balancing rule (cut-set pipelining): for every node, all incoming paths
     must carry the same total added latency; shortfall on a channel is made
     up with extra FIFO depth (which, unlike registers, is free at runtime —
     it only buffers).  Mutates ``graph`` channel depths in place and returns
-    the report.
+    the report.  ``order``: optional precomputed topological order (the
+    compiler pipeline memoizes it per compile()).
     """
-    order = graph.topo_order()
+    if order is None:
+        order = graph.topo_order()
     added = {i: channel_hops(graph, c, partition, floorplans, cluster)
              for i, c in enumerate(graph.channels)}
     ch_index = {id(c): i for i, c in enumerate(graph.channels)}

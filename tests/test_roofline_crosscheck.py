@@ -10,6 +10,7 @@ import pytest
 from repro.configs import get_arch
 from repro.launch.analytic import prefill_flops
 from repro.launch.graphs import layer_flops
+from repro.launch.hlo_analysis import cost_summary
 from repro.models import LayerSpec, init_params
 from repro.models import transformer as T
 from repro.models import layers
@@ -30,7 +31,8 @@ def _forward_flops(cfg, batch, seq):
     compiled = jax.jit(fwd).lower(
         jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg)),
         toks).compile()
-    return float(compiled.cost_analysis().get("flops", 0.0))
+    # cost_summary normalizes the jax 0.4.3x one-element-list return shape.
+    return cost_summary(compiled)["flops"]
 
 
 def test_layer_flops_matches_hlo_differencing():
