@@ -14,6 +14,12 @@ Hard checks (always): the vectorized path's Eq. 2 partition objective equals
 the legacy path's on every config.  Speedup floors (full mode only, skipped
 under --smoke so CI machines can't flake): kl_refine ≥ 3× on the 256-node /
 8-device synthetic graph; exact-model build ≥ 1.5× on the largest instance.
+
+Measured-vs-predicted (the ``exec`` section): the dataflow executor
+(``repro.exec``) actually runs a subset of the compiled designs and the
+resulting per-channel measured bytes must agree with the partition's Eq. 2
+comm_cost accounting (cut-set identity + bit-exact objective re-evaluation)
+— asserted in both modes.
 """
 from __future__ import annotations
 
@@ -35,6 +41,10 @@ FULL_CONFIGS = [
     ("cnn", 2), ("cnn", 4),
 ]
 SMOKE_CONFIGS = [("stencil", 2), ("pagerank", 2), ("knn", 2), ("cnn", 2)]
+
+# Configs the dataflow executor actually runs (measured-vs-predicted).
+EXEC_SMOKE_CONFIGS = [("stencil", 2), ("knn", 2)]
+EXEC_FULL_CONFIGS = EXEC_SMOKE_CONFIGS + [("pagerank", 4), ("cnn", 4)]
 
 # Keeps pagerank×8 (65 channels × 28 pairs = 1820; exact branch-and-cut
 # needs >60 s) and knn×8 (192 × 28 = 5376) on the recursive-bisect path in
@@ -106,6 +116,50 @@ def bench_config(app: str, ndev: int) -> Dict[str, object]:
         "partition_speedup": round(ref_s / max(new_s, 1e-9), 2),
         "floorplan_dev0_wirelength": fp0.wirelength if fp0 else None,
         "makespan_s": design.schedule.makespan if design.schedule else None,
+    }
+
+
+def bench_exec(app: str, ndev: int) -> Dict[str, object]:
+    """Run the compiled design on the dataflow executor and fold the
+    measured traffic next to the analytic accounting (hard agreement)."""
+    import jax.numpy as jnp
+
+    from repro.compiler import compile as tapa_compile
+    from repro.core import fpga_ring_cluster
+    from repro.exec import bind_programs, execute
+
+    mod = _app_module(app)
+    graph = mod.build_graph(ndev)
+    design = tapa_compile(graph, fpga_ring_cluster(ndev),
+                          _options(mod, ndev))
+    # One binding for both the run and the reference: the parity check
+    # must compare outputs against the same generated inputs.
+    binding = bind_programs(graph)
+    result = execute(design, binding)
+    report = result.report
+
+    got, expected = result.outputs, binding.reference()
+    if isinstance(got, tuple):              # knn: compare distances
+        got, expected = got[0], expected[0]
+    parity_err = float(jnp.max(jnp.abs(got - expected)))
+    agree = report.agreement()
+    if parity_err > binding.atol:
+        raise AssertionError(
+            f"{graph.name}: executor numerics diverged from the "
+            f"single-device reference ({parity_err} > {binding.atol})")
+    if not all(agree.values()):
+        raise AssertionError(
+            f"{graph.name}: measured traffic disagrees with the "
+            f"partition's comm_cost accounting: {agree}")
+    summ = report.summary()
+    return {
+        "app": app, "ndev": ndev, "graph": graph.name,
+        "parity_max_err": parity_err, "parity_atol": binding.atol,
+        "iterations": report.iterations, "sweeps": report.sweeps,
+        "wall_time_s": round(report.wall_time_s, 4),
+        "starvation_events": sum(report.starvation_events.values()),
+        "comm": summ["comm"],
+        "schedule": summ["schedule"],
     }
 
 
@@ -196,6 +250,17 @@ def main() -> int:
               f"{rec['partition_speedup']:5.2f}x)  obj={rec['partition_objective']:10.1f} "
               f"total {time.perf_counter() - t0:6.1f}s")
 
+    exec_configs = EXEC_SMOKE_CONFIGS if args.smoke else EXEC_FULL_CONFIGS
+    exec_records: List[Dict[str, object]] = []
+    for app, ndev in exec_configs:
+        rec = bench_exec(app, ndev)
+        exec_records.append(rec)
+        print(f"[exec {rec['graph']:24s}] parity {rec['parity_max_err']:.1e} "
+              f"measured {rec['comm']['measured_inter_bytes']}B "
+              f"cut_match={rec['comm']['cut_set_match']} "
+              f"cost_match={rec['comm']['comm_cost_match']} "
+              f"({rec['sweeps']} sweeps, {rec['wall_time_s']}s)")
+
     kl = bench_kl_refine()
     print(f"[kl_refine {kl['nodes']}n/{kl['ndev']}d] ref {kl['ref_s']}s "
           f"vec {kl['vec_s']}s -> {kl['speedup']}x")
@@ -213,17 +278,20 @@ def main() -> int:
                 f"model build speedup {build['speedup']} below 1.5x floor")
 
     out = {
-        "schema": "bench-compile/v1",
+        "schema": "bench-compile/v2",
         "created_unix": time.time(),
         "mode": "smoke" if args.smoke else "full",
         "configs": records,
         "micro": {"kl_refine": kl, "model_build": build},
+        # Measured-vs-predicted: the executor ran these designs for real.
+        "exec": exec_records,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)
         f.write("\n")
     print(f"\nPERF RESULT: {len(records)} configs, all objectives match "
-          f"legacy; wrote {args.out}")
+          f"legacy; {len(exec_records)} executed designs agree with the "
+          f"comm_cost accounting; wrote {args.out}")
     return 0
 
 

@@ -108,3 +108,58 @@ def run_numeric(h: int = 32, w: int = 32, cin: int = 64, cout: int = 64,
     wgt = jax.random.normal(jax.random.fold_in(rng, 1),
                             (3, 3, cin, cout), jnp.float32) * 0.05
     return conv_op(x, wgt)
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    """Executable bodies for the systolic column chain (repro.exec hook).
+
+    Output-stationary decomposition: column *j* owns the weight slice for
+    ``cout_per_col`` output channels; the activation tile streams down the
+    chain while each column appends its partial output — the last column's
+    token is the full conv, channel-concatenated, matching the
+    single-device ``conv_op`` numerics.
+    """
+    from ..exec.programs import SOURCE_KEY, ProgramBinding
+    from ..kernels import conv_op
+    from ..kernels.systolic_matmul.ref import conv_im2col_ref
+
+    spec = dict(spec or {})
+    h, w = spec.get("h", 8), spec.get("w", 8)
+    cin = spec.get("cin", 8)
+    cpc = spec.get("cout_per_col", 2)
+    streams = spec.get("streams", 2)
+    seed = spec.get("seed", 0)
+    cols = sorted(graph.tasks, key=lambda t: int(t[len("col"):]))
+    c = len(cols)
+
+    rng = jax.random.PRNGKey(seed)
+    wgt = jax.random.normal(jax.random.fold_in(rng, 1),
+                            (3, 3, cin, c * cpc), jnp.float32) * 0.05
+    xs = [jax.random.normal(jax.random.fold_in(rng, 100 + t), (h, w, cin),
+                            jnp.float32) for t in range(streams)]
+
+    def col_body(j):
+        w_j = wgt[..., j * cpc:(j + 1) * cpc]
+
+        def body(inputs):
+            if j == 0:
+                x, y = inputs[SOURCE_KEY], None
+            else:
+                tok = inputs[cols[j - 1]]
+                x, y = tok["x"], tok["y"]
+            y_j = conv_im2col_ref(x, w_j)
+            y = y_j if y is None else jnp.concatenate([y, y_j], axis=-1)
+            # The last column's finished tile leaves the array.
+            return y if j == c - 1 else {"x": x, "y": y}
+        return body
+
+    programs = {name: col_body(j) for j, name in enumerate(cols)}
+
+    def reference():
+        return jnp.stack([conv_op(x, wgt) for x in xs])
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=streams,
+        source_inputs={cols[0]: xs},
+        finalize=lambda sinks: jnp.stack(sinks[cols[-1]]),
+        reference=reference, atol=2e-4)

@@ -110,3 +110,81 @@ def run_numeric(n: int = 2048, dim: int = 16, q: int = 32, k: int = K,
                                 jnp.float32)
     return knn_op(queries, data, k=k, block_q=min(32, q),
                   block_n=min(512, n))
+
+
+def _merge_topk(parts, k: int):
+    """Merge per-shard (dists, global_idx) candidates into the k smallest."""
+    d = jnp.concatenate([p[0] for p in parts], axis=1)
+    gi = jnp.concatenate([p[1] for p in parts], axis=1)
+    neg_d, pos = jax.lax.top_k(-d, min(k, d.shape[1]))
+    return -neg_d, jnp.take_along_axis(gi, pos, axis=1)
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    """Executable bodies for the CHIP-KNN graph (repro.exec hook).
+
+    Each blue ``dist{b}`` module owns a dataset shard and emits its local
+    top-k candidates (paper Fig. 4: only K survivors per module cross a
+    channel); ``sort{s}`` merges its blues, ``agg`` merges the sorters —
+    the distributed merge of per-shard top-k equals the global top-k.
+    """
+    from ..exec.programs import SOURCE_KEY, ProgramBinding
+    from ..kernels import knn_op
+    from ..kernels.knn.ref import knn_ref
+
+    spec = dict(spec or {})
+    n = spec.get("n", 1024)
+    dim = spec.get("dim", 8)
+    q = spec.get("q", 8)
+    k = spec.get("k", K)
+    streams = spec.get("streams", 2)
+    seed = spec.get("seed", 0)
+    blues = sorted((t for t in graph.tasks if t.startswith("dist")),
+                   key=lambda t: int(t[len("dist"):]))
+    sorters = sorted((t for t in graph.tasks if t.startswith("sort")),
+                     key=lambda t: int(t[len("sort"):]))
+
+    rng = jax.random.PRNGKey(seed)
+    data = jax.random.normal(rng, (n, dim), jnp.float32)
+    queries = [jax.random.normal(jax.random.fold_in(rng, 1 + t), (q, dim),
+                                 jnp.float32) for t in range(streams)]
+    shards = np.array_split(np.arange(n), len(blues))
+
+    def dist_body(shard_idx):
+        shard = data[jnp.asarray(shard_idx)]
+        gidx = jnp.asarray(shard_idx)
+
+        def body(inputs):
+            d, li = knn_ref(inputs[SOURCE_KEY], shard,
+                            min(k, len(shard_idx)))
+            return d, gidx[li]
+        return body
+
+    def merge_body(preds):
+        def body(inputs):
+            return _merge_topk([inputs[p] for p in preds], k)
+        return body
+
+    programs = {}
+    for b, name in enumerate(blues):
+        programs[name] = dist_body(shards[b])
+    for s, name in enumerate(sorters):
+        programs[name] = merge_body(
+            [blues[b] for b in range(len(blues))
+             if b % len(sorters) == s])
+    programs["agg"] = merge_body(sorters)
+
+    def reference():
+        outs = [knn_op(qs, data, k=k, block_q=min(32, q),
+                       block_n=min(512, n)) for qs in queries]
+        return (jnp.stack([o[0] for o in outs]),
+                jnp.stack([o[1] for o in outs]))
+
+    def finalize(sinks):
+        return (jnp.stack([d for d, _ in sinks["agg"]]),
+                jnp.stack([i for _, i in sinks["agg"]]))
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=streams,
+        source_inputs={b: queries for b in blues},
+        finalize=finalize, reference=reference, atol=1e-4)

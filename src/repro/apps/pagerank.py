@@ -138,3 +138,65 @@ def run_numeric(n_nodes: int = 512, n_edges: int = 4096, iters: int = 10,
 
     rank, _ = jax.lax.scan(body, rank, None, length=iters)
     return rank
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    """Executable bodies for the PageRank graph (repro.exec hook).
+
+    The convergence cycle (Fig. 9's back edge) becomes a primed back-edge
+    FIFO: the router pops last iteration's rank from ``accum``, shards the
+    edge contributions across the PEs (a routed output — one distinct slice
+    per channel), each PE segment-sums its shard, and ``accum`` folds the
+    partials with damping and recirculates.  ``iterations`` steady-state
+    firings reproduce ``run_numeric`` exactly (same rng draws, same
+    edge-centric update).
+    """
+    from ..exec.programs import ProgramBinding, RoutedOutput
+
+    spec = dict(spec or {})
+    n = spec.get("n_nodes", 256)
+    e = spec.get("n_edges", 2048)
+    iters = spec.get("iters", 8)
+    damping = spec.get("damping", 0.85)
+    seed = spec.get("seed", 0)
+    pes = sorted((t for t in graph.tasks if t.startswith("pe")),
+                 key=lambda t: int(t[len("pe"):]))
+
+    # Same generator call order as run_numeric → identical graph.
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(rng.integers(0, n, e))
+    dst = jnp.asarray(rng.integers(0, n, e))
+    out_deg = jnp.zeros(n).at[src].add(1.0).clip(1.0)
+    shards = np.array_split(np.arange(e), len(pes))
+
+    def router_body(inputs):
+        contrib = inputs["accum"][src] / out_deg[src]
+        return RoutedOutput({name: contrib[jnp.asarray(shards[p])]
+                             for p, name in enumerate(pes)})
+
+    def pe_body(p):
+        dst_p = dst[jnp.asarray(shards[p])]
+
+        def body(inputs):
+            return jnp.zeros(n).at[dst_p].add(inputs["router"])
+        return body
+
+    def accum_body(inputs):
+        acc = sum(inputs[name] for name in pes)
+        return (1 - damping) / n + damping * acc
+
+    programs = {"router": router_body, "accum": accum_body}
+    for p, name in enumerate(pes):
+        programs[name] = pe_body(p)
+
+    back = [i for i, c in enumerate(graph.channels) if c.meta.get("back")]
+
+    def reference():
+        return run_numeric(n_nodes=n, n_edges=e, iters=iters, seed=seed,
+                           damping=damping)
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=iters,
+        prime={i: jnp.full((n,), 1.0 / n) for i in back},
+        finalize=lambda sinks: sinks["accum"][-1],
+        reference=reference, atol=1e-5)

@@ -127,3 +127,48 @@ def run_numeric(h: int = 256, w: int = 256, iters: int = 4,
     from ..kernels import dilate_op
     img = jax.random.normal(jax.random.PRNGKey(seed), (h, w), jnp.float32)
     return dilate_op(img, iters=iters, block_rows=min(128, h))
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    """Executable bodies for the stage chain (repro.exec hook).
+
+    Each ``stage{s}`` applies its iteration share of the dilation to the
+    image streaming through the chain — composing the stages reproduces the
+    single-device kernel at ``stage_iters × ndev`` total iterations.  The
+    reduced numeric scale (``spec``: h/w/stage_iters/streams/seed) is
+    independent of the graph's modeled Table-4 scale.
+    """
+    from ..exec.programs import SOURCE_KEY, ProgramBinding
+    from ..kernels import dilate_op
+    from ..kernels.stencil_dilate.ref import dilate_iters_ref
+
+    spec = dict(spec or {})
+    h, w = spec.get("h", 64), spec.get("w", 64)
+    stage_iters = spec.get("stage_iters", 2)
+    streams = spec.get("streams", 3)
+    seed = spec.get("seed", 0)
+    stages = sorted(graph.tasks, key=lambda t: int(t[len("stage"):]))
+    ndev = len(stages)
+
+    rng = jax.random.PRNGKey(seed)
+    imgs = [jax.random.normal(jax.random.fold_in(rng, t), (h, w),
+                              jnp.float32) for t in range(streams)]
+
+    def stage_body(prev):
+        def body(inputs):
+            img = inputs[SOURCE_KEY] if prev is None else inputs[prev]
+            return dilate_iters_ref(img, stage_iters)
+        return body
+
+    programs = {s: stage_body(stages[i - 1] if i else None)
+                for i, s in enumerate(stages)}
+
+    def reference():
+        return jnp.stack([dilate_op(img, iters=stage_iters * ndev,
+                                    block_rows=min(128, h)) for img in imgs])
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=streams,
+        source_inputs={stages[0]: imgs},
+        finalize=lambda sinks: jnp.stack(sinks[stages[-1]]),
+        reference=reference, atol=1e-6)

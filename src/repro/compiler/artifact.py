@@ -52,6 +52,19 @@ class CompiledDesign:
     unit_scale: Mapping[str, float]
     pass_records: Tuple[PassRecord, ...]
 
+    # -- execution ---------------------------------------------------------
+    def execute(self, inputs: Optional[Mapping[str, object]] = None, **kw):
+        """Run this design on the dataflow executor (``repro.exec``).
+
+        ``inputs`` is the app binding's numeric spec (shapes / iteration
+        counts / seeds); remaining keywords pass through to
+        :func:`repro.exec.execute`.  Returns an ``ExecutionResult`` whose
+        ``report`` compares measured traffic against this design's
+        partition/schedule accounting.
+        """
+        from ..exec import execute as _execute   # deferred: optional layer
+        return _execute(self, inputs=inputs, **kw)
+
     # -- queries -----------------------------------------------------------
     def pass_record(self, name: str) -> Optional[PassRecord]:
         for rec in self.pass_records:

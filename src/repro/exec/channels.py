@@ -1,0 +1,159 @@
+"""Bounded FIFO channels for the dataflow executor — paper §4.2/§4.6 (C3/C5).
+
+A :class:`FifoChannel` is the executable counterpart of a graph
+:class:`~repro.core.graph.Channel`: a latency-insensitive bounded queue whose
+
+* **capacity** is the §4.6 ``depth`` the ``pipeline_interconnect`` pass wrote
+  onto the graph channel (the cut-set-balanced FIFO depth), and whose
+* **latency** is ``1 + added_latency`` sweeps — the implicit output register
+  plus the pipeline registers the pass inserted on the crossing, so a token
+  pushed in sweep *t* becomes visible to the consumer in sweep
+  ``t + 1 + added``.
+
+Intra-device channels hand the array straight through.  Inter-device
+channels move the token to the destination's jax device with
+``jax.device_put`` (host-platform emulated devices in CI — the same
+mechanism ``launch/dryrun.py`` uses); when ``depth >= 2`` the transfer is
+issued eagerly at push time so it overlaps the producer's next firing
+(double buffering), while a depth-1 FIFO can only transfer at pop time —
+the §4.6 claim that shallow FIFOs serialize communication behind compute.
+
+The channel records measured traffic (actual leaf bytes crossing the device
+boundary), token counts, and occupancy high-water marks; the
+:class:`~repro.exec.report.ExecutionReport` aggregates these against the
+partition's Eq. 2 ``comm_cost`` accounting.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.graph import Channel
+
+
+def token_bytes(token: Any) -> int:
+    """Payload size of a token: summed nbytes over its array leaves."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(token):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        else:
+            total += int(np.asarray(leaf).nbytes)
+    return total
+
+
+def _put(token: Any, device) -> Any:
+    if device is None:
+        return token
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(leaf, device), token)
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    """Measured per-channel counters, filled in while the executor runs."""
+
+    tokens: int = 0                 # tokens pushed over the lifetime
+    measured_bytes: int = 0         # actual payload bytes (inter-device only)
+    max_occupancy: int = 0          # high-water mark of queued tokens
+    blocked_pushes: int = 0         # producer stalls on a full FIFO
+    empty_pops: int = 0             # consumer polls on an empty/unripe FIFO
+
+
+class FifoChannel:
+    """One executable bounded FIFO joining two task instances.
+
+    ``capacity`` counts every in-flight token, visible or not; ``latency``
+    is the sweep delay between push and visibility.  ``dst_device`` is the
+    *physical* jax device of the consumer (None → no placement, logical
+    accounting only); ``src_dev``/``dst_dev`` are the partition's logical
+    device ids, which drive the traffic accounting even when fewer physical
+    devices exist than the partition assumed.
+    """
+
+    def __init__(self, index: int, channel: Channel, src_dev: int,
+                 dst_dev: int, *, capacity: Optional[int] = None,
+                 latency: int = 1, dst_device=None):
+        if capacity is None:
+            capacity = channel.depth
+        if capacity < 1:
+            raise ValueError(f"channel {channel.src}->{channel.dst}: "
+                             f"capacity must be >= 1, got {capacity}")
+        if latency < 1:
+            raise ValueError("latency must be >= 1 sweep")
+        self.index = index
+        self.graph_channel = channel
+        self.src, self.dst = channel.src, channel.dst
+        self.src_dev, self.dst_dev = src_dev, dst_dev
+        self.capacity = int(capacity)
+        self.latency = int(latency)
+        self.is_back = bool(channel.meta.get("back"))
+        self.inter_device = src_dev != dst_dev
+        self.dst_device = dst_device
+        # Double buffering (§4.6): depth >= 2 lets the transfer overlap the
+        # producer; a depth-1 FIFO must move the data when the consumer asks.
+        self.eager_transfer = self.inter_device and self.capacity >= 2
+        self._q: Deque[Tuple[int, Any]] = collections.deque()
+        self.stats = ChannelStats()
+
+    # -- state queries ------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.capacity
+
+    def head_visible(self, sweep: int) -> bool:
+        """A token is ready for the consumer this sweep."""
+        return bool(self._q) and self._q[0][0] <= sweep
+
+    # -- dataflow -----------------------------------------------------------
+    def prime(self, token: Any) -> None:
+        """Deposit an initial token (back-edge seeding, visible at once)."""
+        if self.full:
+            raise ValueError(f"channel {self.src}->{self.dst}: "
+                             "cannot prime a full FIFO")
+        if self.inter_device:
+            self.stats.measured_bytes += token_bytes(token)
+            if self.eager_transfer:
+                token = _put(token, self.dst_device)
+        self._q.append((0, token))
+        self.stats.tokens += 1
+        self.stats.max_occupancy = max(self.stats.max_occupancy, len(self._q))
+
+    def push(self, token: Any, sweep: int) -> None:
+        if self.full:
+            self.stats.blocked_pushes += 1
+            raise RuntimeError(f"push on full channel {self.src}->{self.dst}")
+        if self.inter_device:
+            self.stats.measured_bytes += token_bytes(token)
+            if self.eager_transfer:
+                token = _put(token, self.dst_device)
+        self._q.append((sweep + self.latency, token))
+        self.stats.tokens += 1
+        self.stats.max_occupancy = max(self.stats.max_occupancy, len(self._q))
+
+    def pop(self, sweep: int) -> Any:
+        if not self.head_visible(sweep):
+            self.stats.empty_pops += 1
+            raise RuntimeError(
+                f"pop on empty/unripe channel {self.src}->{self.dst}")
+        _, token = self._q.popleft()
+        if self.inter_device and not self.eager_transfer:
+            token = _put(token, self.dst_device)
+        return token
+
+    def pending_visibility(self) -> List[int]:
+        """Sweeps at which queued tokens become visible (deadlock probe)."""
+        return [vis for vis, _ in self._q]
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"FifoChannel({self.src}->{self.dst}, dev {self.src_dev}->"
+                f"{self.dst_dev}, {self.occupancy}/{self.capacity}, "
+                f"lat {self.latency})")

@@ -1,0 +1,247 @@
+"""The dataflow executor — runs a :class:`CompiledDesign` end to end.
+
+Execution model (synchronous dataflow, one sweep ≈ one pipeline clock):
+
+* Every task fires ``iterations`` times.  A task may fire in a sweep when
+  every in-channel (back edges included — those carry the iteration
+  dependency and are seeded by ``ProgramBinding.prime``) has a *visible*
+  token and every out-channel has a free slot.
+* Tasks are processed in **reverse topological order** within a sweep, so a
+  consumer's pop frees its FIFO slot before the producer's push is
+  considered — the software equivalent of simultaneous push+pop on a full
+  hardware FIFO.  Tokens pushed in sweep *t* become visible at
+  ``t + latency``, so data still advances at most one task per sweep.
+* Channel capacity comes from the §4.6 balanced ``depth`` on the graph
+  channel; channel latency from the pipeline report's ``added_latency``.
+  With balanced depths every task fires every sweep once the pipeline fills
+  (full throughput); clamp a depth below ``added + slack + 1`` and the
+  reconvergent join starves — which the detector below reports instead of
+  silently throttling.
+
+Detection:
+
+* **Hard deadlock** — a sweep fires nothing, and no queued token will ever
+  become visible.  Raises :class:`DeadlockError` listing each unfinished
+  task with the channel that blocks it.
+* **FIFO starvation** — a join cannot fire because one in-channel is empty
+  while a sibling in-channel sits *at capacity*: the signature of an
+  unbalanced cut-set (§4.6).  Transient during pipeline fill never matches
+  (balanced depths leave headroom); persistent imbalance accumulates events
+  until ``starve_limit`` trips :class:`StarvationError` with the channel
+  that needs more depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import jax
+
+from ..compiler.artifact import CompiledDesign
+from .channels import FifoChannel
+from .programs import (SOURCE_KEY, ProgramBinding, RoutedOutput,
+                       bind_programs)
+from .report import ExecutionReport, build_report
+
+
+class DeadlockError(RuntimeError):
+    """No task can ever fire again, yet the run is incomplete."""
+
+
+class StarvationError(DeadlockError):
+    """A join repeatedly starves behind an unbalanced FIFO (§4.6)."""
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    """What came out of the pipe, plus the measured execution report."""
+
+    outputs: Any                          # binding.finalize(...) result
+    sink_outputs: Dict[str, List[Any]]    # raw per-firing sink values
+    report: ExecutionReport
+
+
+def _physical_devices(num_logical: int, devices=None) -> List[Any]:
+    """Map logical partition devices onto the physical jax devices.
+
+    CI runs host-platform emulation (``--xla_force_host_platform_device_count``)
+    so logical == physical; a bare interpreter with one CPU device still
+    executes every design correctly — logical placement keeps driving the
+    traffic accounting, physical arrays just share the one device.
+    """
+    phys = list(devices) if devices is not None else list(jax.devices())
+    return [phys[d % len(phys)] for d in range(max(1, num_logical))]
+
+
+def _block(token: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(token):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def execute(design: CompiledDesign,
+            binding: Optional[ProgramBinding] = None, *,
+            inputs: Optional[Mapping[str, Any]] = None,
+            devices: Optional[Sequence[Any]] = None,
+            max_sweeps: Optional[int] = None,
+            starve_limit: int = 3,
+            check_starvation: bool = True) -> ExecutionResult:
+    """Run ``design`` as a multi-device dataflow program.
+
+    ``binding`` defaults to the app hook resolved from the graph's name
+    (``bind_programs(design.graph, inputs)``); ``inputs`` is that hook's
+    numeric spec (shapes / iteration counts / seeds).  ``devices`` overrides
+    the physical jax devices backing the partition's logical devices.
+    """
+    if design.partition is None:
+        raise ValueError("execute() needs a partitioned design "
+                         "(run the partition pass)")
+    if binding is None:
+        binding = bind_programs(design.graph, inputs)
+    graph, assign = design.graph, design.partition.assignment
+    rep = design.pipeline_report
+    phys = _physical_devices(design.partition.num_devices(), devices)
+
+    channels: List[FifoChannel] = []
+    for i, ch in enumerate(graph.channels):
+        latency = 1 + (rep.added_latency.get(i, 0) if rep is not None else 0)
+        channels.append(FifoChannel(
+            i, ch, assign[ch.src], assign[ch.dst], latency=latency,
+            dst_device=phys[assign[ch.dst] % len(phys)]))
+    for i, token in binding.prime.items():
+        channels[i].prime(token)
+
+    in_chs: Dict[str, List[FifoChannel]] = {t: [] for t in graph.tasks}
+    out_chs: Dict[str, List[FifoChannel]] = {t: [] for t in graph.tasks}
+    for fc in channels:
+        if any(prev.src == fc.src for prev in in_chs[fc.dst]):
+            # token_in is keyed by predecessor name — a second channel from
+            # the same producer would silently overwrite the first's token.
+            raise ValueError(
+                f"parallel channels {fc.src}->{fc.dst}: the executor "
+                "delivers one token per predecessor; merge the payloads "
+                "into one channel (tokens are arbitrary pytrees)")
+        in_chs[fc.dst].append(fc)
+        out_chs[fc.src].append(fc)
+    # Sinks: no forward (non-back) out-channel — their firing values are the
+    # pipeline's results (back edges recirculate, they don't leave the pipe).
+    sinks = [t for t in graph.tasks
+             if not any(not fc.is_back for fc in out_chs[t])]
+
+    T = binding.iterations
+    order = list(reversed(graph.topo_order()))
+    max_lat = max((fc.latency for fc in channels), default=1)
+    if max_sweeps is None:
+        # Pipeline depth is bounded by tasks × max latency; each of the T
+        # firings advances at least one task per sweep barring throttling.
+        max_sweeps = 64 + 4 * (T + len(graph.tasks)) * (1 + max_lat)
+
+    fired: Dict[str, int] = {t: 0 for t in graph.tasks}
+    starve_events: Dict[str, int] = {}
+    starve_detail: List[Dict[str, Any]] = []
+    sink_outputs: Dict[str, List[Any]] = {t: [] for t in sinks}
+    busy_s: Dict[int, float] = {}
+    dev_fired: Dict[int, int] = {}
+
+    def _blockers(task: str, sweep: int) -> List[str]:
+        why = []
+        for fc in in_chs[task]:
+            if not fc.head_visible(sweep):
+                why.append(f"input {fc.src}->{task} empty "
+                           f"(occupancy {fc.occupancy}/{fc.capacity})")
+        for fc in out_chs[task]:
+            if fc.full:
+                why.append(f"output {task}->{fc.dst} full "
+                           f"(depth {fc.capacity})")
+        return why
+
+    t_start = time.perf_counter()
+    sweep, done = 0, False
+    while sweep < max_sweeps:
+        fired_this_sweep = 0
+        for v in order:
+            if fired[v] >= T:
+                continue
+            ready = all(fc.head_visible(sweep) for fc in in_chs[v])
+            space = all(not fc.full for fc in out_chs[v])
+            if not (ready and space):
+                if in_chs[v]:
+                    empty = [fc for fc in in_chs[v]
+                             if not fc.head_visible(sweep)]
+                    at_cap = [fc for fc in in_chs[v] if fc.full]
+                    if empty and at_cap:
+                        # A bounded FIFO may transiently saturate while the
+                        # pipeline fills (bounded by the paths' hop-count
+                        # difference) — only persistence past starve_limit
+                        # is the unbalanced-cut-set signature.
+                        starve_events[v] = starve_events.get(v, 0) + 1
+                        starve_detail.append({
+                            "sweep": sweep, "task": v,
+                            "starved_input": f"{empty[0].src}->{v}",
+                            "full_input": f"{at_cap[0].src}->{v}",
+                            "full_depth": at_cap[0].capacity})
+                        if (check_starvation
+                                and starve_events[v] >= starve_limit):
+                            d = starve_detail[-1]
+                            raise StarvationError(
+                                f"join {v!r} starved {starve_events[v]}x on "
+                                f"{d['starved_input']} while sibling FIFO "
+                                f"{d['full_input']} sat full at depth "
+                                f"{d['full_depth']}: unbalanced cut-set — "
+                                f"§4.6 balancing would deepen "
+                                f"{d['full_input']} (run the "
+                                f"pipeline_interconnect pass or raise "
+                                f"min_depth)")
+                continue
+            token_in: Dict[str, Any] = {fc.src: fc.pop(sweep)
+                                        for fc in in_chs[v]}
+            if not in_chs[v]:
+                token_in[SOURCE_KEY] = binding.source_inputs[v][fired[v]]
+            dev = assign[v]
+            t0 = time.perf_counter()
+            out = binding.programs[v](token_in)
+            _block(out)
+            busy_s[dev] = busy_s.get(dev, 0.0) + time.perf_counter() - t0
+            dev_fired[dev] = dev_fired.get(dev, 0) + 1
+            if isinstance(out, RoutedOutput):
+                for fc in out_chs[v]:
+                    fc.push(out[fc.dst], sweep)
+            else:
+                for fc in out_chs[v]:
+                    fc.push(out, sweep)
+            if v in sinks:
+                sink_outputs[v].append(out)
+            fired[v] += 1
+            fired_this_sweep += 1
+        done = all(n >= T for n in fired.values())
+        if done:
+            break
+        if fired_this_sweep == 0:
+            # Tokens still ripening are progress; a silent sweep without
+            # any is a cycle of blocked tasks — diagnose it.
+            if not any(vis > sweep for fc in channels
+                       for vis in fc.pending_visibility()):
+                lines = [f"  {t} ({fired[t]}/{T} firings): " +
+                         ("; ".join(_blockers(t, sweep)) or "unknown")
+                         for t in graph.tasks if fired[t] < T]
+                raise DeadlockError(
+                    "dataflow deadlock at sweep %d — no task can fire and "
+                    "no token is in flight:\n%s" % (sweep, "\n".join(lines)))
+        sweep += 1
+    if not done:
+        raise DeadlockError(
+            f"executor exceeded max_sweeps={max_sweeps} "
+            f"(fired {sum(fired.values())} of {T * len(graph.tasks)} "
+            f"firings) — throughput collapse; check FIFO depths")
+
+    wall = time.perf_counter() - t_start
+    report = build_report(
+        design=design, channels=channels, iterations=T,
+        sweeps=sweep + 1, wall_time_s=wall, device_busy_s=busy_s,
+        device_fired=dev_fired, starvation_events=starve_events,
+        starvation_detail=starve_detail)
+    outputs = (binding.finalize(sink_outputs)
+               if binding.finalize is not None else sink_outputs)
+    return ExecutionResult(outputs=outputs, sink_outputs=sink_outputs,
+                           report=report)

@@ -1,0 +1,123 @@
+"""Task → program bindings: what each task graph vertex *computes*.
+
+The compiler decides *where* tasks run; a :class:`ProgramBinding` says
+*what* they run.  Each of the paper's four app modules implements a
+``bind_programs(graph, spec=None)`` hook that maps every task of the graph
+it built to an executable jax body (reusing ``repro.kernels`` oracles where
+the reduced CI shapes fit, plain ``jnp`` otherwise) and supplies the input
+streams, back-edge seed tokens, and the single-device reference the
+executor's numerics are checked against.
+
+Program calling convention
+--------------------------
+``fn(inputs: Dict[str, Any]) -> Any | Dict[str, Any]``
+
+* ``inputs`` maps each predecessor task name to the token popped from that
+  channel; source tasks additionally receive the current stream item under
+  ``SOURCE_KEY``.
+* Returning a plain value (dicts included — a dict is just a pytree token)
+  broadcasts it onto every outgoing channel; returning a
+  :class:`RoutedOutput` keyed by successor names routes a distinct token
+  per channel (the PageRank router shards its edge stream this way).
+
+Dispatch: :func:`bind_programs` first consults the explicit registry
+(:func:`register_binder`, for custom graphs such as the deadlock-regression
+fixtures), then falls back to the app module whose name prefixes
+``graph.name`` (``stencil-256x4`` → ``repro.apps.stencil``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+from ..core.graph import TaskGraph
+
+# Key under which a source task's current stream item appears in `inputs`.
+SOURCE_KEY = "__input__"
+
+
+class RoutedOutput(dict):
+    """Marker: a program output carrying one distinct token per successor.
+
+    A plain dict return is an ordinary pytree token broadcast to every
+    out-channel; wrapping it in RoutedOutput makes the executor deliver
+    ``out[successor_name]`` on each channel instead.
+    """
+
+ProgramFn = Callable[[Dict[str, Any]], Any]
+BinderFn = Callable[..., "ProgramBinding"]
+
+BINDER_REGISTRY: Dict[str, BinderFn] = {}
+
+
+def register_binder(prefix: str) -> Callable[[BinderFn], BinderFn]:
+    """Register a binder for graphs whose name starts with ``prefix``."""
+    def deco(fn: BinderFn) -> BinderFn:
+        if prefix in BINDER_REGISTRY:
+            raise ValueError(f"binder {prefix!r} already registered")
+        BINDER_REGISTRY[prefix] = fn
+        return fn
+    return deco
+
+
+@dataclasses.dataclass
+class ProgramBinding:
+    """Everything the executor needs beyond the CompiledDesign.
+
+    ``iterations`` is the steady-state firing count per task (T input items
+    streamed through the pipeline, or T convergence sweeps for iterative
+    graphs).  ``source_inputs`` holds per-firing stream items for tasks with
+    no in-channels.  ``prime`` seeds back-edge channels, keyed by channel
+    index in ``graph.channels`` (the dependency cycle's initial tokens —
+    PageRank's rank vector).  ``finalize`` folds the per-firing outputs of
+    the sink tasks into the value compared against ``reference()``.
+    """
+
+    graph: TaskGraph
+    programs: Mapping[str, ProgramFn]
+    iterations: int
+    source_inputs: Mapping[str, Sequence[Any]] = dataclasses.field(
+        default_factory=dict)
+    prime: Mapping[int, Any] = dataclasses.field(default_factory=dict)
+    finalize: Optional[Callable[[Dict[str, List[Any]]], Any]] = None
+    reference: Optional[Callable[[], Any]] = None
+    atol: float = 1e-5
+
+    def validate(self) -> None:
+        missing = [t for t in self.graph.tasks if t not in self.programs]
+        if missing:
+            raise ValueError(f"no program bound for task(s) {missing}")
+        nch = len(self.graph.channels)
+        bad = [i for i in self.prime if not (0 <= i < nch)]
+        if bad:
+            raise ValueError(f"prime refers to unknown channel(s) {bad}")
+        for t, stream in self.source_inputs.items():
+            if len(stream) < self.iterations:
+                raise ValueError(
+                    f"source {t!r}: {len(stream)} stream items < "
+                    f"{self.iterations} iterations")
+
+
+def bind_programs(graph: TaskGraph, spec: Optional[Mapping[str, Any]] = None
+                  ) -> ProgramBinding:
+    """Resolve the binding for ``graph`` — registry first, app hook second.
+
+    ``spec`` is forwarded to the binder: the reduced numeric configuration
+    (shapes, iteration counts, seeds) overriding its CI-scale defaults.
+    """
+    for prefix, binder in BINDER_REGISTRY.items():
+        if graph.name.startswith(prefix):
+            binding = binder(graph, spec)
+            binding.validate()
+            return binding
+    from .. import apps   # deferred: apps import jax kernels
+    kind = graph.name.split("-", 1)[0]
+    mod = apps.APPS.get(kind)
+    if mod is None or not hasattr(mod, "bind_programs"):
+        raise KeyError(
+            f"no program binding for graph {graph.name!r}: register one "
+            f"with repro.exec.register_binder, or name the graph after an "
+            f"app module with a bind_programs hook ({sorted(apps.APPS)})")
+    binding = mod.bind_programs(graph, spec)
+    binding.validate()
+    return binding

@@ -1,0 +1,189 @@
+"""`ExecutionReport` — measured execution vs the analytic model.
+
+The compiler *predicts*: the partition charges Eq. 2 comm cost on its cut
+channels, the graph models per-step channel volumes (``bytes_per_step``),
+and the schedule pass simulates makespan/busy time.  The executor
+*measures*: actual bytes crossing each inter-device channel, FIFO occupancy
+high-water marks, and per-device busy wall time.  This module folds both
+sides into one JSON-ready record so ``benchmarks/perf.py`` can emit a
+measured-vs-predicted section into ``BENCH_compile.json``.
+
+The two hard agreement checks (:meth:`ExecutionReport.agreement`):
+
+* ``cut_set_match`` — the channels that actually moved inter-device bytes
+  are exactly the partition's ``cut_channels``.
+* ``comm_cost_match`` — Eq. 2 re-evaluated over the *measured* cut set
+  (width × dist × λ, same arithmetic as the partitioner) reproduces
+  ``partition.comm_cost`` bit for bit.  Together they certify that the
+  traffic the executor moved is the traffic the solver paid for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from .channels import FifoChannel
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelTrace:
+    """One channel's measured life, next to its modeled accounting."""
+
+    index: int
+    src: str
+    dst: str
+    src_dev: int
+    dst_dev: int
+    inter_device: bool
+    eager_transfer: bool           # depth >= 2 double buffering (§4.6)
+    depth: int
+    latency: int
+    tokens: int
+    max_occupancy: int
+    measured_bytes: int            # actual payload moved across devices
+    modeled_bytes: float           # graph bytes_per_step × tokens
+    width_bits: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionReport:
+    """Measured execution record for one ``execute()`` run."""
+
+    graph_name: str
+    num_devices: int
+    iterations: int
+    sweeps: int
+    wall_time_s: float
+    channels: List[ChannelTrace]
+    device_busy_s: Dict[int, float]
+    device_fired: Dict[int, int]
+    starvation_events: Dict[str, int]
+    starvation_detail: List[Dict[str, Any]]
+    # Analytic counterparts (from the CompiledDesign).
+    analytic_comm_cost: float                  # partition.comm_cost (Eq. 2)
+    measured_cut_comm_cost: float              # Eq. 2 over the measured cut
+    measured_comm_cost: float                  # Eq. 2 w/ measured bits/firing
+    analytic_cut_channels: int
+    schedule_makespan_s: Optional[float]
+    schedule_comm_bytes: Optional[float]       # Σ cut bytes_per_step (model)
+
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def measured_inter_bytes(self) -> int:
+        return sum(c.measured_bytes for c in self.channels if c.inter_device)
+
+    @property
+    def modeled_inter_bytes(self) -> float:
+        return sum(c.modeled_bytes for c in self.channels if c.inter_device)
+
+    @property
+    def measured_cut_channels(self) -> int:
+        return sum(1 for c in self.channels
+                   if c.inter_device and c.measured_bytes > 0)
+
+    def device_busy_frac(self) -> Dict[int, float]:
+        if self.wall_time_s <= 0:
+            return {d: 0.0 for d in self.device_busy_s}
+        return {d: b / self.wall_time_s
+                for d, b in sorted(self.device_busy_s.items())}
+
+    def agreement(self) -> Dict[str, bool]:
+        """The measured-vs-predicted accounting checks (see module doc)."""
+        return {
+            "cut_set_match": (self.measured_cut_channels
+                              == self.analytic_cut_channels),
+            "comm_cost_match": math.isclose(
+                self.measured_cut_comm_cost, self.analytic_comm_cost,
+                rel_tol=1e-9, abs_tol=1e-9),
+        }
+
+    # -- reporting ----------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        """JSON digest, shaped like ``CompiledDesign.summary()`` sections."""
+        inter = [c for c in self.channels if c.inter_device]
+        return {
+            "graph": self.graph_name,
+            "num_devices": self.num_devices,
+            "iterations": self.iterations,
+            "sweeps": self.sweeps,
+            "wall_time_s": round(self.wall_time_s, 4),
+            "device_busy_s": {str(d): round(b, 4)
+                              for d, b in sorted(self.device_busy_s.items())},
+            "device_fired": {str(d): n
+                             for d, n in sorted(self.device_fired.items())},
+            "starvation_events": dict(self.starvation_events),
+            "comm": {
+                "measured_inter_bytes": self.measured_inter_bytes,
+                "modeled_inter_bytes": self.modeled_inter_bytes,
+                "measured_cut_channels": self.measured_cut_channels,
+                "analytic_cut_channels": self.analytic_cut_channels,
+                "analytic_comm_cost": self.analytic_comm_cost,
+                "measured_cut_comm_cost": self.measured_cut_comm_cost,
+                "measured_comm_cost": self.measured_comm_cost,
+                **self.agreement(),
+            },
+            "schedule": {
+                "analytic_makespan_s": self.schedule_makespan_s,
+                "analytic_comm_bytes": self.schedule_comm_bytes,
+                "measured_wall_s": round(self.wall_time_s, 4),
+            },
+            "channels": [c.to_json() for c in inter],
+        }
+
+
+def build_report(*, design, channels: Sequence[FifoChannel],
+                 iterations: int, sweeps: int, wall_time_s: float,
+                 device_busy_s: Mapping[int, float],
+                 device_fired: Mapping[int, int],
+                 starvation_events: Mapping[str, int],
+                 starvation_detail: Sequence[Dict[str, Any]]
+                 ) -> ExecutionReport:
+    """Assemble the report from live channels + the design's analytics."""
+    part, cluster = design.partition, design.cluster
+    traces: List[ChannelTrace] = []
+    measured_cut_cost = 0.0
+    measured_cost = 0.0
+    for fc in channels:
+        gch = fc.graph_channel
+        traces.append(ChannelTrace(
+            index=fc.index, src=fc.src, dst=fc.dst,
+            src_dev=fc.src_dev, dst_dev=fc.dst_dev,
+            inter_device=fc.inter_device,
+            eager_transfer=fc.eager_transfer,
+            depth=fc.capacity, latency=fc.latency,
+            tokens=fc.stats.tokens,
+            max_occupancy=fc.stats.max_occupancy,
+            measured_bytes=fc.stats.measured_bytes,
+            modeled_bytes=float(gch.bytes_per_step or gch.width_bits / 8.0)
+            * fc.stats.tokens,
+            width_bits=gch.width_bits))
+        if fc.inter_device and fc.stats.measured_bytes > 0:
+            # Eq. 2 with the channel's declared width — must reproduce the
+            # partitioner's objective — and with the measured payload.
+            measured_cut_cost += cluster.comm_cost(
+                fc.src_dev, fc.dst_dev, gch.width_bits)
+            measured_cost += cluster.comm_cost(
+                fc.src_dev, fc.dst_dev,
+                8.0 * fc.stats.measured_bytes / max(1, fc.stats.tokens))
+    sched = design.schedule
+    return ExecutionReport(
+        graph_name=design.graph.name,
+        num_devices=part.num_devices(),
+        iterations=iterations,
+        sweeps=sweeps,
+        wall_time_s=wall_time_s,
+        channels=traces,
+        device_busy_s=dict(device_busy_s),
+        device_fired=dict(device_fired),
+        starvation_events=dict(starvation_events),
+        starvation_detail=list(starvation_detail),
+        analytic_comm_cost=part.comm_cost,
+        measured_cut_comm_cost=measured_cut_cost,
+        measured_comm_cost=measured_cost,
+        analytic_cut_channels=len(part.cut_channels),
+        schedule_makespan_s=sched.makespan if sched is not None else None,
+        schedule_comm_bytes=sched.comm_bytes if sched is not None else None)

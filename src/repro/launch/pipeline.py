@@ -21,6 +21,26 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def _shard_map_over_pod(fn, mesh: Mesh, in_specs, out_specs):
+    """shard_map MANUAL over 'pod' only, across jax API generations.
+
+    jax >= 0.6 exposes ``jax.shard_map(..., check_vma=..., axis_names=...)``
+    with true partial-manual mode.  0.4.x only has
+    ``jax.experimental.shard_map.shard_map``, whose partial-auto mode cannot
+    lower ``axis_index`` under SPMD ("PartitionId is not supported"), so
+    there we go fully manual: specs that do not mention 'data'/'model'
+    replicate those axes (redundant compute instead of auto-GSPMD — same
+    numerics, acceptable for the compat path).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names={"pod"})
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def gpipe_forward(stage_fn: Callable, stacked_params, x, mesh: Mesh,
                   microbatches: int):
     """Run x through P pipeline stages (P = mesh.shape['pod']).
@@ -39,13 +59,11 @@ def gpipe_forward(stage_fn: Callable, stacked_params, x, mesh: Mesh,
     fwd = [(i, i + 1) for i in range(num_stages - 1)]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map_over_pod, mesh=mesh,
         # Manual over 'pod' ONLY — specs mention just the manual axis;
         # 'data'/'model' shardings ride along in the types (auto-GSPMD).
         in_specs=(P("pod"), P()),
         out_specs=P(),
-        check_vma=False,
-        axis_names={"pod"},
     )
     def run(params_local, x_local):
         # params_local: [1, ...] this pod's stage slice.

@@ -1,0 +1,89 @@
+"""Unit tests for the executor's bounded FIFO channels (repro.exec)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Channel
+from repro.exec import FifoChannel, token_bytes
+
+
+def _ch(depth=2, latency=1, src_dev=0, dst_dev=0, width=512):
+    gch = Channel("a", "b", width, bytes_per_step=64.0)
+    gch.depth = depth
+    return FifoChannel(0, gch, src_dev, dst_dev, latency=latency)
+
+
+def test_capacity_bounds_pushes():
+    ch = _ch(depth=2)
+    ch.push(jnp.zeros(4), sweep=0)
+    ch.push(jnp.zeros(4), sweep=0)
+    assert ch.full
+    with pytest.raises(RuntimeError, match="full"):
+        ch.push(jnp.zeros(4), sweep=0)
+    assert ch.stats.blocked_pushes == 1
+    assert ch.stats.max_occupancy == 2
+
+
+def test_latency_gates_visibility():
+    ch = _ch(depth=4, latency=3)
+    ch.push(jnp.arange(4.0), sweep=0)
+    for sweep in (0, 1, 2):
+        assert not ch.head_visible(sweep)
+    assert ch.head_visible(3)
+    out = ch.pop(3)
+    np.testing.assert_array_equal(np.asarray(out), np.arange(4.0))
+
+
+def test_pop_unripe_raises():
+    ch = _ch(depth=2, latency=2)
+    ch.push(jnp.zeros(2), sweep=5)
+    with pytest.raises(RuntimeError, match="empty/unripe"):
+        ch.pop(5)
+    assert ch.stats.empty_pops == 1
+
+
+def test_fifo_order_preserved():
+    ch = _ch(depth=3)
+    for i in range(3):
+        ch.push(jnp.full((2,), float(i)), sweep=i)
+    got = [float(ch.pop(10)[0]) for _ in range(3)]
+    assert got == [0.0, 1.0, 2.0]
+
+
+def test_inter_device_measures_bytes():
+    ch = _ch(depth=2, src_dev=0, dst_dev=1)
+    assert ch.inter_device and ch.eager_transfer
+    tok = {"x": jnp.zeros((4, 4), jnp.float32), "y": jnp.zeros(2)}
+    ch.push(tok, sweep=0)
+    assert ch.stats.measured_bytes == token_bytes(tok) == 4 * 4 * 4 + 2 * 4
+
+
+def test_intra_device_measures_nothing():
+    ch = _ch(depth=2, src_dev=1, dst_dev=1)
+    assert not ch.inter_device
+    ch.push(jnp.zeros((8, 8)), sweep=0)
+    assert ch.stats.measured_bytes == 0
+
+
+def test_depth1_disables_double_buffering():
+    """§4.6: a depth-1 inter-device FIFO cannot overlap its transfer."""
+    assert _ch(depth=2, dst_dev=1).eager_transfer
+    assert not _ch(depth=1, dst_dev=1).eager_transfer
+    assert not _ch(depth=4).eager_transfer          # intra-device: no move
+
+
+def test_prime_deposits_visible_token():
+    ch = _ch(depth=2, latency=4)
+    ch.prime(jnp.ones(3))
+    assert ch.head_visible(0)       # primed tokens are visible at once
+    np.testing.assert_array_equal(np.asarray(ch.pop(0)), np.ones(3))
+
+
+def test_capacity_validation():
+    gch = Channel("a", "b", 512)
+    gch.depth = 0
+    with pytest.raises(ValueError, match="capacity"):
+        FifoChannel(0, gch, 0, 0)
+    gch.depth = 2
+    with pytest.raises(ValueError, match="latency"):
+        FifoChannel(0, gch, 0, 0, latency=0)

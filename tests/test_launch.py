@@ -93,7 +93,7 @@ SUBPROC_SCRIPT = textwrap.dedent("""
     import jax, json
     import jax.numpy as jnp
     from repro.configs import get_arch, input_specs
-    from repro.launch import steps
+    from repro.launch import hlo_analysis, steps
     from repro.launch.mesh import make_mesh
 
     import dataclasses
@@ -110,9 +110,10 @@ SUBPROC_SCRIPT = textwrap.dedent("""
         }
         lowered = steps.lower_train(cfg, mesh, batch, microbatches=2)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis()
-        out[name] = {"flops": float(ca.get("flops", 0)),
-                     "ok": True}
+        # cost_summary normalizes the jax 0.4.3x one-element-list return of
+        # compiled.cost_analysis() (a raw .get() here broke on that version).
+        ca = hlo_analysis.cost_summary(compiled)
+        out[name] = {"flops": ca["flops"], "ok": True}
     print(json.dumps(out))
 """)
 
@@ -121,7 +122,11 @@ def test_dryrun_small_mesh_subprocess():
     """lower+compile on 8 fake devices, single- and multi-pod meshes.
     Run in a subprocess: device count locks at first jax init."""
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    # Hermetic w.r.t. the caller's environment: the script needs src/ on the
+    # path (prepended so an ambient PYTHONPATH can't shadow the repo) and
+    # must own XLA_FLAGS (the device count locks at first jax init).
+    ambient = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = "src" + (os.pathsep + ambient if ambient else "")
     env.pop("XLA_FLAGS", None)
     res = subprocess.run([sys.executable, "-c", SUBPROC_SCRIPT],
                          capture_output=True, text=True, env=env,

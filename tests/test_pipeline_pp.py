@@ -40,7 +40,8 @@ SCRIPT = textwrap.dedent("""
 
 def test_gpipe_matches_sequential():
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    ambient = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = "src" + (os.pathsep + ambient if ambient else "")
     env.pop("XLA_FLAGS", None)
     res = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True, env=env,
