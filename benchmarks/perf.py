@@ -20,6 +20,14 @@ Measured-vs-predicted (the ``exec`` section): the dataflow executor
 resulting per-channel measured bytes must agree with the partition's Eq. 2
 comm_cost accounting (cut-set identity + bit-exact objective re-evaluation)
 — asserted in both modes.
+
+Network fabric (the ``net`` section, schema v3): designs also execute
+*through* the ``repro.net`` fabric — per-link measured bytes must equal the
+hop-weighted cut-set traffic exactly and numerics must be bit-identical to
+the ideal path; the λ cross-check routes identical traffic over an Ethernet
+and a PCIe Gen3x16 ring and asserts the 12.5× cost ratio within 1e-9; and
+the hot-spotted-bus demo must trigger the congestion_feedback repartition
+and measurably reduce max link utilization.  All asserted in both modes.
 """
 from __future__ import annotations
 
@@ -45,6 +53,10 @@ SMOKE_CONFIGS = [("stencil", 2), ("pagerank", 2), ("knn", 2), ("cnn", 2)]
 # Configs the dataflow executor actually runs (measured-vs-predicted).
 EXEC_SMOKE_CONFIGS = [("stencil", 2), ("knn", 2)]
 EXEC_FULL_CONFIGS = EXEC_SMOKE_CONFIGS + [("pagerank", 4), ("cnn", 4)]
+
+# Configs executed THROUGH the network fabric (schema v3 `net` section).
+NET_SMOKE_CONFIGS = [("stencil", 2)]
+NET_FULL_CONFIGS = [("stencil", 4), ("pagerank", 4)]
 
 # Keeps pagerank×8 (65 channels × 28 pairs = 1820; exact branch-and-cut
 # needs >60 s) and knn×8 (192 × 28 = 5376) on the recursive-bisect path in
@@ -163,6 +175,103 @@ def bench_exec(app: str, ndev: int) -> Dict[str, object]:
     }
 
 
+def bench_net_exec(app: str, ndev: int) -> Dict[str, object]:
+    """Execute a design through the repro.net fabric: per-link measured
+    bytes vs the hop-weighted cut-set model, bit-identical numerics vs the
+    ideal path, and the congestion_feedback pass record."""
+    import jax.numpy as jnp
+
+    from repro.compiler import compile as tapa_compile
+    from repro.core import fpga_ring_cluster
+    from repro.exec import bind_programs, execute
+    from repro.net import cluster_fabric
+
+    mod = _app_module(app)
+    graph = mod.build_graph(ndev)
+    cluster = fpga_ring_cluster(ndev)
+    design = tapa_compile(graph, cluster, _options(mod, ndev).replace(
+        fabric=cluster_fabric(cluster), floorplan_devices=None,
+        passes=("normalize_units", "partition", "congestion_feedback",
+                "pipeline_interconnect", "schedule")))
+    via_net = execute(design, bind_programs(graph))
+    ideal = execute(design, bind_programs(graph), fabric=None)
+    got_n, got_i = via_net.outputs, ideal.outputs
+    if isinstance(got_n, tuple):
+        got_n, got_i = got_n[0], got_i[0]
+    if not bool(jnp.all(got_n == got_i)):
+        raise AssertionError(
+            f"{graph.name}: fabric path numerics diverged from ideal path")
+    rep = via_net.report
+    agree = rep.agreement()
+    if not all(agree.values()):
+        raise AssertionError(f"{graph.name}: fabric accounting: {agree}")
+    if rep.net_link_bytes != rep.net_hop_weighted_bytes:
+        raise AssertionError(
+            f"{graph.name}: per-link bytes {rep.net_link_bytes} != "
+            f"hop-weighted cut traffic {rep.net_hop_weighted_bytes}")
+    fb = design.pass_record("congestion_feedback")
+    cong = rep.congestion
+    return {
+        "app": app, "ndev": ndev, "graph": graph.name,
+        "bit_identical": True,
+        "sweeps_fabric": rep.sweeps, "sweeps_ideal": ideal.report.sweeps,
+        "link_bytes": rep.net_link_bytes,
+        "hop_weighted_bytes": rep.net_hop_weighted_bytes,
+        "max_link_utilization": cong.max_utilization,
+        "stalled_flits": sum(l.stalled_flits for l in cong.links),
+        "congestion_waits": sum(rep.congestion_waits.values()),
+        "feedback": dict(fb.detail) if fb else None,
+        "agreement": agree,
+    }
+
+
+def bench_lambda_crosscheck(ndev: int = 4) -> Dict[str, object]:
+    """§4.3 λ validation: identical routed traffic, PCIe vs Ethernet."""
+    from repro.core.topology import ETHERNET_100G, PCIE_GEN3X16, Ring
+    from repro.net import build_fabric, lambda_crosscheck
+
+    topo = Ring(ndev)
+    traffic = [(i, j, 512.0)
+               for i in range(ndev) for j in range(ndev) if i != j]
+    res = lambda_crosscheck(build_fabric(topo, ETHERNET_100G),
+                            build_fabric(topo, PCIE_GEN3X16), traffic)
+    if abs(res["ratio"] - 12.5) > 1e-9:
+        raise AssertionError(
+            f"λ cross-check: PCIe/Ethernet routed-cost ratio {res['ratio']} "
+            f"!= 12.5 (tolerance 1e-9)")
+    return {"topology": "ring", "ndev": ndev, "flows": len(traffic),
+            "ethernet_cost": res["cost_a"], "pcie_cost": res["cost_b"],
+            "ratio": res["ratio"], "expected": 12.5}
+
+
+def bench_congestion_feedback() -> Dict[str, object]:
+    """Hot-spotted bus: the feedback repartition must measurably reduce
+    max link utilization (asserted in both modes)."""
+    from repro.compiler import CompileOptions, compile as tapa_compile
+    from repro.core import ResourceProfile, Task, TaskGraph
+    from repro.core.topology import ALVEO_U55C, Bus, Cluster
+    from repro.net import cluster_fabric
+
+    g = TaskGraph("hotbus-bench")
+    for n, lut in (("a", 350e3), ("b", 350e3), ("c", 150e3), ("d", 150e3)):
+        g.add_task(Task(n, ResourceProfile({"LUT": lut})))
+    g.add_channel("a", "b", 4096, bytes_per_step=65536.0)
+    g.add_channel("b", "c", 64, bytes_per_step=8.0)
+    g.add_channel("c", "d", 4096, bytes_per_step=65536.0)
+    cluster = Cluster(ALVEO_U55C, Bus(2))
+    design = tapa_compile(g, cluster, CompileOptions(
+        balance_kind="LUT", balance_tol=0.1,
+        fabric=cluster_fabric(cluster),
+        passes=("normalize_units", "partition", "congestion_feedback")))
+    d = dict(design.pass_record("congestion_feedback").detail)
+    if not d["repartitioned"] or \
+            d["max_utilization_after"] >= d["max_utilization_before"]:
+        raise AssertionError(
+            f"hot bus did not trigger a utilization-reducing repartition: "
+            f"{d}")
+    return d
+
+
 def bench_kl_refine(nv: int = 256, ndev: int = 8,
                     avg_degree: int = 8) -> Dict[str, object]:
     """Synthetic-graph micro-benchmark of the PR 3 kl_refine rewrite."""
@@ -261,6 +370,25 @@ def main() -> int:
               f"cost_match={rec['comm']['comm_cost_match']} "
               f"({rec['sweeps']} sweeps, {rec['wall_time_s']}s)")
 
+    net_configs = NET_SMOKE_CONFIGS if args.smoke else NET_FULL_CONFIGS
+    net_records: List[Dict[str, object]] = []
+    for app, ndev in net_configs:
+        rec = bench_net_exec(app, ndev)
+        net_records.append(rec)
+        print(f"[net  {rec['graph']:24s}] link_bytes {rec['link_bytes']:.0f} "
+              f"== hop-weighted {rec['hop_weighted_bytes']} "
+              f"max_util {rec['max_link_utilization']:.3f} "
+              f"({rec['sweeps_fabric']} sweeps vs "
+              f"{rec['sweeps_ideal']} ideal)")
+    lam_check = bench_lambda_crosscheck()
+    print(f"[net  lambda-crosscheck     ] PCIe/Ethernet ratio "
+          f"{lam_check['ratio']:.10f} (expect 12.5)")
+    hot = bench_congestion_feedback()
+    print(f"[net  congestion-feedback   ] bus max util "
+          f"{hot['max_utilization_before']:.1f} -> "
+          f"{hot['max_utilization_after']:.3f} "
+          f"({hot['method']})")
+
     kl = bench_kl_refine()
     print(f"[kl_refine {kl['nodes']}n/{kl['ndev']}d] ref {kl['ref_s']}s "
           f"vec {kl['vec_s']}s -> {kl['speedup']}x")
@@ -278,20 +406,27 @@ def main() -> int:
                 f"model build speedup {build['speedup']} below 1.5x floor")
 
     out = {
-        "schema": "bench-compile/v2",
+        "schema": "bench-compile/v3",
         "created_unix": time.time(),
         "mode": "smoke" if args.smoke else "full",
         "configs": records,
         "micro": {"kl_refine": kl, "model_build": build},
         # Measured-vs-predicted: the executor ran these designs for real.
         "exec": exec_records,
+        # Network fabric (repro.net): designs executed over physical links.
+        "net": {
+            "fabric_exec": net_records,
+            "lambda_crosscheck": lam_check,
+            "congestion_feedback": hot,
+        },
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)
         f.write("\n")
     print(f"\nPERF RESULT: {len(records)} configs, all objectives match "
           f"legacy; {len(exec_records)} executed designs agree with the "
-          f"comm_cost accounting; wrote {args.out}")
+          f"comm_cost accounting; {len(net_records)} fabric-routed designs "
+          f"conserve per-link bytes; wrote {args.out}")
     return 0
 
 

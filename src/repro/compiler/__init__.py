@@ -55,6 +55,21 @@ Passes
     depths are consumed downstream by launch/steps.py) and records a
     :class:`~repro.core.PipelineReport`.  ``min_depth`` floors every FIFO.
 
+``congestion_feedback``
+    §4.3 congestion control over the network fabric (``repro.net``),
+    auto-inserted after ``partition`` when ``options.fabric`` is set.
+    Projects per-link traffic from the current partition over the fabric's
+    routing tables; when a link's utilization (demanded bytes per step
+    over the link's per-step service) exceeds ``congestion_threshold``, the
+    partition is re-solved against congestion-calibrated pair costs
+    (per-link λ inflated by the overshoot, ``congestion_penalty``),
+    dropping the balance band if ``congestion_relax_balance`` — accepted
+    retries re-tag ``partition.stats.method`` with ``"-congested"``.  The
+    fabric and the final projected :class:`~repro.net.CongestionReport`
+    land on the artifact (``design.fabric`` / ``design.congestion``), and
+    ``design.execute()`` then routes inter-device tokens through the
+    fabric's links.
+
 ``schedule``
     Event-driven cost-model simulation (§5): per-task roofline times,
     transfer overlap (``overlap``), HBM bandwidth sharing
@@ -91,6 +106,18 @@ floorplan_strict             fail instead of escalating/greedy (floorplan)
 floorplan_devices            explicit device subset; None = all occupied
                              (floorplan)
 min_depth                    minimum FIFO depth (pipeline_interconnect)
+fabric                       explicit repro.net Fabric; enables the
+                             congestion_feedback pass + fabric execution
+congestion_threshold         per-link utilization trigger, default 0.75
+                             (congestion_feedback)
+congestion_step_time_s       projection time base; None = the transport
+                             sweep time (congestion_feedback)
+congestion_penalty           λ inflation per unit overshoot, default 2.0
+                             (congestion_feedback)
+congestion_max_retries       repartition attempts, default 2
+                             (congestion_feedback)
+congestion_relax_balance     drop the balance band on hot repartitions,
+                             default True (congestion_feedback)
 freq_hz                      clock per device: None = fmax, float, or
                              mapping (schedule)
 overlap                      stream transfers alongside compute (schedule)
@@ -118,10 +145,10 @@ from .artifact import CompiledDesign, PassRecord
 from .options import CompileOptions
 from .passes import (CompileError, CompileState, PASS_REGISTRY,
                      register_pass)
-from .pipeline import DEFAULT_PASSES, CompilerPipeline, compile
+from .pipeline import DEFAULT_PASSES, FABRIC_PASSES, CompilerPipeline, compile
 
 __all__ = [
     "CompileError", "CompileOptions", "CompileState", "CompiledDesign",
-    "CompilerPipeline", "DEFAULT_PASSES", "PASS_REGISTRY", "PassRecord",
-    "compile", "register_pass",
+    "CompilerPipeline", "DEFAULT_PASSES", "FABRIC_PASSES", "PASS_REGISTRY",
+    "PassRecord", "compile", "register_pass",
 ]

@@ -51,6 +51,12 @@ class CompiledDesign:
     # (area_solver = area / scale); {} or all-1.0 when no scaling was needed.
     unit_scale: Mapping[str, float]
     pass_records: Tuple[PassRecord, ...]
+    # Network fabric (repro.net) the design was compiled against, and the
+    # congestion_feedback pass's projected per-link traffic.  None when the
+    # design was compiled fabric-less (the ideal-transfer execution path).
+    # Typed loosely so the compiler stays importable without repro.net.
+    fabric: Optional[object] = None          # net.fabric.Fabric
+    congestion: Optional[object] = None      # net.congestion.CongestionReport
 
     # -- execution ---------------------------------------------------------
     def execute(self, inputs: Optional[Mapping[str, object]] = None, **kw):
@@ -122,6 +128,10 @@ class CompiledDesign:
             out["schedule"] = {"makespan_s": s.makespan,
                                "comm_time_s": s.comm_time,
                                "comm_bytes": s.comm_bytes}
+        if self.fabric is not None:
+            out["net"] = self.fabric.describe()
+            if self.congestion is not None:
+                out["net"]["projected"] = self.congestion.summary()
         return out
 
     def to_json(self, indent: Optional[int] = None) -> str:

@@ -10,9 +10,12 @@ functions (``partition`` / ``floorplan_device`` / ``pipeline_interconnect`` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional, Tuple, Union
+from typing import TYPE_CHECKING, Mapping, Optional, Tuple, Union
 
 from ..core.floorplan import SlotGrid
+
+if TYPE_CHECKING:                     # avoid a runtime compiler<->net cycle
+    from ..net.fabric import Fabric
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +67,29 @@ class CompileOptions:
 
     # -- pipeline_interconnect pass (§4.6) --------------------------------
     min_depth: int = 2
+
+    # -- congestion_feedback pass (repro.net, §4.3) -----------------------
+    # Explicit network fabric.  When set, compile() appends the
+    # congestion_feedback pass after partition (unless options.passes
+    # overrides the pipeline), the artifact carries the fabric, and
+    # design.execute() routes inter-device tokens through it.  None with
+    # an explicit congestion_feedback pass derives the fabric from the
+    # cluster topology.
+    fabric: Optional["Fabric"] = None
+    # A link whose projected utilization — OFFERED load: demanded bytes
+    # per step over the link's bandwidth × step-time service, may exceed
+    # 1 — passes this threshold triggers a calibrated repartition.
+    congestion_threshold: float = 0.75
+    # Time base of one step for the projection.  None = the transport's
+    # NetConfig.sweep_time_s default (the same time base the executor's
+    # sweeps use).
+    congestion_step_time_s: Optional[float] = None
+    # λ inflation per unit of relative utilization overshoot on hot links.
+    congestion_penalty: float = 2.0
+    congestion_max_retries: int = 2
+    # §4.3: congestion control outranks load balance — hot repartitions
+    # drop the balance band so traffic may consolidate off hot links.
+    congestion_relax_balance: bool = True
 
     # -- schedule pass (cost model, §5) -----------------------------------
     # None = device fmax (or 1.0 when the device has no fabric clock);

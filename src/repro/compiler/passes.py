@@ -56,6 +56,10 @@ class CompileState:
     floorplans: Dict[int, Floorplan] = dataclasses.field(default_factory=dict)
     pipeline_report: Optional[PipelineReport] = None
     schedule: Optional[ScheduleResult] = None
+    # Network fabric + projected per-link traffic (congestion_feedback pass;
+    # typed loosely to keep repro.compiler importable without repro.net).
+    fabric: Optional[object] = None          # net.fabric.Fabric
+    congestion: Optional[object] = None      # net.congestion.CongestionReport
     # Per-compile() memo of solver inputs (pair-cost matrix, per-task area
     # vectors, topological order) so the passes stop recomputing them.
     _memo: Dict[object, object] = dataclasses.field(default_factory=dict,
@@ -239,7 +243,9 @@ def run_floorplan(state: CompileState):
         raise CompileError("floorplan pass requires a partition pass first")
     part = state.partition
     grid = opts.grid or _default_grid(state.cluster)
-    capacity = state.work_cluster.device.resources
+    # The interconnect IP (paper §4.4, Table 10) is pre-placed area: the
+    # floorplanner packs tasks into the device net of it.
+    capacity = state.work_cluster.effective_resources()
     hbm_set = set(opts.hbm_tasks)
     if opts.floorplan_devices is not None:
         # An explicitly requested device must be plannable: an empty or
@@ -300,6 +306,25 @@ def run_pipeline_interconnect(state: CompileState):
     state.pipeline_report = rep
     return {"num_crossings": rep.num_crossings,
             "max_crossing": rep.max_crossing}
+
+
+# ---------------------------------------------------------------------------
+# congestion_feedback — §4.3 congestion control over the network fabric
+# (repro.net).  The body lives in repro.net.calibrate; the deferred import
+# keeps the pass registered even when repro.net is never touched and avoids
+# a compiler<->net import cycle.
+# ---------------------------------------------------------------------------
+
+@register_pass("congestion_feedback")
+def run_congestion_feedback(state: CompileState):
+    if state.partition is None:
+        raise CompileError(
+            "congestion_feedback pass requires a partition pass first")
+    from ..net.calibrate import congestion_feedback_pass
+    try:
+        return congestion_feedback_pass(state)
+    except RuntimeError as e:               # fabric/cluster mismatch etc.
+        raise CompileError(str(e)) from e
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,18 @@ DEFAULT_PASSES: Tuple[str, ...] = (
     "schedule",
 )
 
+# With an explicit network fabric (options.fabric), the §4.3 congestion
+# feedback runs right after partition so floorplan/pipelining/schedule see
+# the (possibly repartitioned) congestion-controlled assignment.
+FABRIC_PASSES: Tuple[str, ...] = (
+    "normalize_units",
+    "partition",
+    "congestion_feedback",
+    "floorplan",
+    "pipeline_interconnect",
+    "schedule",
+)
+
 
 class CompilerPipeline:
     """An ordered sequence of registered passes over one CompileState."""
@@ -59,7 +71,10 @@ class CompilerPipeline:
             pipeline_report=state.pipeline_report,
             schedule=state.schedule,
             unit_scale=dict(state.unit_scale),
-            pass_records=tuple(records))
+            pass_records=tuple(records),
+            fabric=state.fabric if state.fabric is not None
+            else options.fabric,
+            congestion=state.congestion)
 
 
 def compile(graph: TaskGraph, cluster: Cluster,  # noqa: A001 - deliberate
@@ -72,5 +87,10 @@ def compile(graph: TaskGraph, cluster: Cluster,  # noqa: A001 - deliberate
     floorplan + schedule).
     """
     options = options or CompileOptions()
-    passes = options.passes if options.passes is not None else DEFAULT_PASSES
+    if options.passes is not None:
+        passes = options.passes
+    elif options.fabric is not None:
+        passes = FABRIC_PASSES
+    else:
+        passes = DEFAULT_PASSES
     return CompilerPipeline(passes).run(graph, cluster, options)

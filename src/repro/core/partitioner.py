@@ -164,7 +164,8 @@ def partition(graph: TaskGraph, cluster: Cluster, *,
     else:
         assign, method = _solve_recursive(graph, cluster, kinds, balance_kind,
                                           balance_tol, pins, time_limit,
-                                          areas, use_reference=use_reference)
+                                          areas, use_reference=use_reference,
+                                          pair_cost=pair_cost)
 
     # KL polish (never worsens comm; respects capacity).  Skipped when a
     # balance band is active — single-move refinement is blind to it and
@@ -394,7 +395,8 @@ def _solve_exact_reference(graph: TaskGraph, cluster: Cluster, kinds,
 def _solve_recursive(graph: TaskGraph, cluster: Cluster, kinds, balance_kind,
                      balance_tol, pins, time_limit,
                      areas: Optional[Dict[str, np.ndarray]] = None,
-                     use_reference: bool = False
+                     use_reference: bool = False,
+                     pair_cost: Optional[np.ndarray] = None
                      ) -> Tuple[Dict[str, int], str]:
     ndev = cluster.num_devices
     nodes = graph.task_names()
@@ -413,7 +415,8 @@ def _solve_recursive(graph: TaskGraph, cluster: Cluster, kinds, balance_kind,
                                        right_devs, areas, kinds, cluster,
                                        balance_kind, balance_tol, pins,
                                        time_limit,
-                                       use_reference=use_reference)
+                                       use_reference=use_reference,
+                                       pair_cost=pair_cost)
         band_relaxed = band_relaxed or relaxed
         left = [v for v in node_set if assign[v] == 0]
         right = [v for v in node_set if assign[v] == 1]
@@ -430,13 +433,19 @@ def _solve_recursive(graph: TaskGraph, cluster: Cluster, kinds, balance_kind,
 
 def _two_way_ilp(graph, node_set, left_devs, right_devs, areas, kinds,
                  cluster, balance_kind, balance_tol, pins, time_limit,
-                 use_reference: bool = False) -> Tuple[Dict[str, int], bool]:
+                 use_reference: bool = False,
+                 pair_cost: Optional[np.ndarray] = None
+                 ) -> Tuple[Dict[str, int], bool]:
     """One bisection level.  Returns (side assignment, band_relaxed).
 
     ``use_reference`` emits the cut-cost block through the legacy per-edge
     dict-row API (identical vars/rows, so both paths stay deterministic and
     comparable) — the baseline ``benchmarks/perf.py`` times on the
-    recursive-bisect configs.
+    recursive-bisect configs.  ``pair_cost`` overrides the representative
+    inter-group edge cost (its [i, j] equals ``cluster.comm_cost(i, j, 1)``
+    for the baseline matrix, so passing it is behavior-preserving; the
+    congestion_feedback pass passes a calibrated matrix so hot links stay
+    expensive on the recursive path too).
     """
     node_in = set(node_set)
 
@@ -474,7 +483,10 @@ def _two_way_ilp(graph, node_set, left_devs, right_devs, areas, kinds,
                                  (1 + balance_tol) * mean_r)
 
         # Cut edges cost: representative inter-group distance.
-        rep_cost = cluster.comm_cost(left_devs[-1], right_devs[0], 1.0)
+        if pair_cost is not None:
+            rep_cost = float(pair_cost[left_devs[-1], right_devs[0]])
+        else:
+            rep_cost = cluster.comm_cost(left_devs[-1], right_devs[0], 1.0)
         in_edges = [(side[c.src], side[c.dst], float(c.width_bits))
                     for c in graph.channels
                     if c.src in node_in and c.dst in node_in]

@@ -38,14 +38,29 @@ def lam(protocol: Protocol, baseline: Protocol = ETHERNET_100G) -> float:
 
 
 class Topology:
-    """Base class: integer device ids 0..n-1 with a hop-distance metric."""
+    """Base class: integer device ids 0..n-1 with a hop-distance metric.
+
+    ``shared_medium`` marks topologies whose "one hop" is a single shared
+    arbitration domain (the bus): the network fabric models them as one
+    physical link that every transfer crosses, instead of a clique.
+
+    ``hop_metric`` declares that ``dist()`` equals shortest-path length
+    over the dist()==1 link graph (true for every built-in kind, asserted
+    in tests).  It gates the fabric-BFS fast path of :meth:`diameter`;
+    subclasses with a metric that is NOT hop-realizable (e.g. tiered
+    costs) must leave it False — or override ``dist`` on a built-in and
+    unset it — to keep the exhaustive max-dist definition.
+    """
 
     kind = "abstract"
+    shared_medium = False
+    hop_metric = False
 
     def __init__(self, num_devices: int):
         if num_devices < 1:
             raise ValueError("need >=1 device")
         self.num_devices = num_devices
+        self._diameter: Optional[int] = None
 
     def dist(self, i: int, j: int) -> int:
         raise NotImplementedError
@@ -54,15 +69,46 @@ class Topology:
         if not (0 <= i < self.num_devices and 0 <= j < self.num_devices):
             raise IndexError((i, j, self.num_devices))
 
+    def neighbors(self, i: int) -> List[int]:
+        """Devices one hop from ``i``.  Default: a dist()==1 scan; subclasses
+        with cheap structural neighborhoods may override."""
+        self.check(i, i)
+        return [j for j in range(self.num_devices)
+                if j != i and self.dist(i, j) == 1]
+
+    def links(self) -> List[Tuple[int, int]]:
+        """Physical cables as unordered (lo, hi) device pairs (dist()==1)."""
+        return [(i, j) for i in range(self.num_devices)
+                for j in self.neighbors(i) if i < j]
+
     def diameter(self) -> int:
-        n = self.num_devices
-        return max(self.dist(i, j) for i in range(n) for j in range(n))
+        """Max distance, memoized.  ``hop_metric`` classes (every built-in)
+        use one all-pairs sweep over the fabric's memoized BFS routes
+        (O(n·E)) instead of O(n²) repeated ``dist()`` calls; other metrics
+        get one exhaustive max-dist scan — correct for ANY metric — whose
+        result is likewise memoized.
+        """
+        if self._diameter is None:
+            if self.hop_metric:
+                from ..net.fabric import build_fabric  # deferred: net↔core
+                try:
+                    self._diameter = build_fabric(self).diameter()
+                except ValueError:
+                    # No dist()==1 links / disconnected: the subclass broke
+                    # the hop_metric contract — exhaustive scan still works.
+                    pass
+            if self._diameter is None:
+                n = self.num_devices
+                self._diameter = max(self.dist(i, j)
+                                     for i in range(n) for j in range(n))
+        return self._diameter
 
 
 class DaisyChain(Topology):
     """Eq. 3: dist = |device_num_i - device_num_j|."""
 
     kind = "daisy-chain"
+    hop_metric = True
 
     def dist(self, i: int, j: int) -> int:
         self.check(i, j)
@@ -73,6 +119,7 @@ class Ring(Topology):
     """Eq. 3-ring: min(|i-j|, total - |i-j|) (paper's testbed: 4-FPGA ring)."""
 
     kind = "ring"
+    hop_metric = True
 
     def dist(self, i: int, j: int) -> int:
         self.check(i, j)
@@ -81,9 +128,14 @@ class Ring(Topology):
 
 
 class Bus(Topology):
-    """Shared bus: every pair is one hop (contention handled by cost model)."""
+    """Shared bus: every pair is one hop (contention handled by cost model).
+
+    ``shared_medium``: the fabric models the bus as ONE link every transfer
+    arbitrates for — the canonical hot-spot topology."""
 
     kind = "bus"
+    shared_medium = True
+    hop_metric = True
 
     def dist(self, i: int, j: int) -> int:
         self.check(i, j)
@@ -94,6 +146,7 @@ class Star(Topology):
     """Hub-and-spoke: device 0 is the hub."""
 
     kind = "star"
+    hop_metric = True
 
     def dist(self, i: int, j: int) -> int:
         self.check(i, j)
@@ -106,6 +159,7 @@ class Mesh2D(Topology):
     """2-D grid; optionally wrapped (torus — the TPU ICI topology)."""
 
     kind = "mesh2d"
+    hop_metric = True
 
     def __init__(self, rows: int, cols: int, torus: bool = False):
         super().__init__(rows * cols)
@@ -126,6 +180,7 @@ class Mesh2D(Topology):
 
 class Hypercube(Topology):
     kind = "hypercube"
+    hop_metric = True
 
     def __init__(self, dim: int):
         super().__init__(1 << dim)
@@ -189,6 +244,9 @@ class Cluster:
     devices_per_node: Optional[int] = None
     inter_node_protocol: Protocol = INTER_NODE_10G
     utilization_threshold: float = 0.70   # paper Eq. 1 threshold T
+    # Charge the interconnect IP's per-FPGA area (paper §4.4, Table 10) to
+    # every device's usable capacity.  Single-device clusters need no NIC.
+    charge_interconnect_overhead: bool = True
 
     @property
     def num_devices(self) -> int:
@@ -211,8 +269,30 @@ class Cluster:
         d = self.topology.dist(i, j)
         return width_bits * d * lam(self.protocol_between(i, j))
 
+    def interconnect_overhead_frac(self, kind: str) -> float:
+        """Fraction of a device's ``kind`` consumed by the interconnect IP
+        (paper §4.4, Table 10: the Ethernet core costs LUT/FF/BRAM on every
+        FPGA it is instantiated on)."""
+        if not self.charge_interconnect_overhead or self.num_devices <= 1:
+            return 0.0
+        frac = self.protocol.resource_overhead.get(kind, 0.0)
+        if self.devices_per_node and self.devices_per_node < self.num_devices:
+            # Conservative: the inter-node NIC is charged to EVERY device,
+            # not just node-boundary ones — capacity is modeled per
+            # cluster, so Eq. 1 rows stay device-uniform.  Boundary-only
+            # charging needs per-device capacities (future work).
+            frac += self.inter_node_protocol.resource_overhead.get(kind, 0.0)
+        return frac
+
+    def effective_resources(self) -> Dict[str, float]:
+        """Device resources net of the interconnect IP (pre-placed area)."""
+        return {k: v * (1.0 - self.interconnect_overhead_frac(k))
+                for k, v in self.device.resources.items()}
+
     def capacity(self, kind: str) -> float:
-        return self.device.resources.get(kind, 0.0) * self.utilization_threshold
+        res = self.device.resources.get(kind, 0.0)
+        return (res * (1.0 - self.interconnect_overhead_frac(kind))
+                * self.utilization_threshold)
 
 
 def fpga_ring_cluster(n: int, devices_per_node: Optional[int] = None) -> Cluster:

@@ -11,23 +11,34 @@ A :class:`FifoChannel` is the executable counterpart of a graph
   ``t + 1 + added``.
 
 Intra-device channels hand the array straight through.  Inter-device
-channels move the token to the destination's jax device with
-``jax.device_put`` (host-platform emulated devices in CI — the same
-mechanism ``launch/dryrun.py`` uses); when ``depth >= 2`` the transfer is
-issued eagerly at push time so it overlaps the producer's next firing
-(double buffering), while a depth-1 FIFO can only transfer at pop time —
-the §4.6 claim that shallow FIFOs serialize communication behind compute.
+channels have two transports:
+
+* **ideal** (``transport=None`` — the fast path): the token moves to the
+  destination's jax device with ``jax.device_put``; when ``depth >= 2`` the
+  transfer is issued eagerly at push time so it overlaps the producer's
+  next firing (double buffering), while a depth-1 FIFO can only transfer at
+  pop time — the §4.6 claim that shallow FIFOs serialize communication
+  behind compute.
+* **fabric** (``transport`` = a :class:`~repro.net.transport.FabricTransport`):
+  the push is packetized into MTU flits and routed hop by hop over the
+  physical links of the :class:`~repro.net.fabric.Fabric`, contending with
+  every other channel whose route shares a link.  The token becomes visible
+  only after its *own* message's final flit is delivered (FIFO order is
+  preserved by the queue: a later token that happens to finish its network
+  transit earlier still waits behind the head).  The ``jax.device_put``
+  happens at delivery — the network *is* the transfer.
 
 The channel records measured traffic (actual leaf bytes crossing the device
-boundary), token counts, and occupancy high-water marks; the
-:class:`~repro.exec.report.ExecutionReport` aggregates these against the
-partition's Eq. 2 ``comm_cost`` accounting.
+boundary, plus the subset submitted to the network), token counts, and
+occupancy high-water marks; the :class:`~repro.exec.report.ExecutionReport`
+aggregates these against the partition's Eq. 2 ``comm_cost`` accounting and
+(with a fabric) the per-link conservation identities.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Deque, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -59,9 +70,24 @@ class ChannelStats:
 
     tokens: int = 0                 # tokens pushed over the lifetime
     measured_bytes: int = 0         # actual payload bytes (inter-device only)
+    net_bytes: int = 0              # bytes submitted to the fabric transport
+    net_delivered_bytes: int = 0    # bytes whose message fully delivered
     max_occupancy: int = 0          # high-water mark of queued tokens
     blocked_pushes: int = 0         # producer stalls on a full FIFO
     empty_pops: int = 0             # consumer polls on an empty/unripe FIFO
+
+
+class _Entry:
+    """One queued token: visibility sweep (None while in the network)."""
+
+    __slots__ = ("vis", "token", "mid", "nbytes")
+
+    def __init__(self, vis: Optional[int], token: Any,
+                 mid: Optional[int] = None, nbytes: int = 0):
+        self.vis = vis
+        self.token = token
+        self.mid = mid
+        self.nbytes = nbytes
 
 
 class FifoChannel:
@@ -72,12 +98,13 @@ class FifoChannel:
     *physical* jax device of the consumer (None → no placement, logical
     accounting only); ``src_dev``/``dst_dev`` are the partition's logical
     device ids, which drive the traffic accounting even when fewer physical
-    devices exist than the partition assumed.
+    devices exist than the partition assumed.  ``transport`` routes
+    inter-device pushes over the network fabric (None → ideal transfer).
     """
 
     def __init__(self, index: int, channel: Channel, src_dev: int,
                  dst_dev: int, *, capacity: Optional[int] = None,
-                 latency: int = 1, dst_device=None):
+                 latency: int = 1, dst_device=None, transport=None):
         if capacity is None:
             capacity = channel.depth
         if capacity < 1:
@@ -94,10 +121,12 @@ class FifoChannel:
         self.is_back = bool(channel.meta.get("back"))
         self.inter_device = src_dev != dst_dev
         self.dst_device = dst_device
+        self.transport = transport if self.inter_device else None
         # Double buffering (§4.6): depth >= 2 lets the transfer overlap the
         # producer; a depth-1 FIFO must move the data when the consumer asks.
         self.eager_transfer = self.inter_device and self.capacity >= 2
-        self._q: Deque[Tuple[int, Any]] = collections.deque()
+        self._q: Deque[_Entry] = collections.deque()
+        self._pending: Dict[int, _Entry] = {}     # message id -> entry
         self.stats = ChannelStats()
 
     # -- state queries ------------------------------------------------------
@@ -109,21 +138,33 @@ class FifoChannel:
     def full(self) -> bool:
         return len(self._q) >= self.capacity
 
+    @property
+    def in_flight(self) -> int:
+        """Tokens still transiting the network fabric."""
+        return len(self._pending)
+
     def head_visible(self, sweep: int) -> bool:
         """A token is ready for the consumer this sweep."""
-        return bool(self._q) and self._q[0][0] <= sweep
+        if not self._q:
+            return False
+        head = self._q[0]
+        return head.vis is not None and head.vis <= sweep
 
     # -- dataflow -----------------------------------------------------------
     def prime(self, token: Any) -> None:
-        """Deposit an initial token (back-edge seeding, visible at once)."""
+        """Deposit an initial token (back-edge seeding, visible at once).
+
+        Primed tokens are pre-loaded state, staged before the clock starts —
+        they never transit the network fabric.
+        """
         if self.full:
             raise ValueError(f"channel {self.src}->{self.dst}: "
                              "cannot prime a full FIFO")
         if self.inter_device:
             self.stats.measured_bytes += token_bytes(token)
-            if self.eager_transfer:
+            if self.eager_transfer or self.transport is not None:
                 token = _put(token, self.dst_device)
-        self._q.append((0, token))
+        self._q.append(_Entry(0, token))
         self.stats.tokens += 1
         self.stats.max_occupancy = max(self.stats.max_occupancy, len(self._q))
 
@@ -132,26 +173,50 @@ class FifoChannel:
             self.stats.blocked_pushes += 1
             raise RuntimeError(f"push on full channel {self.src}->{self.dst}")
         if self.inter_device:
-            self.stats.measured_bytes += token_bytes(token)
+            nbytes = token_bytes(token)
+            self.stats.measured_bytes += nbytes
+            if self.transport is not None:
+                mid = self.transport.submit(self.index, self.src_dev,
+                                            self.dst_dev, nbytes, sweep)
+                self.stats.net_bytes += nbytes
+                entry = _Entry(None, token, mid, nbytes)
+                self._pending[mid] = entry
+                self._q.append(entry)
+                self.stats.tokens += 1
+                self.stats.max_occupancy = max(self.stats.max_occupancy,
+                                               len(self._q))
+                return
             if self.eager_transfer:
                 token = _put(token, self.dst_device)
-        self._q.append((sweep + self.latency, token))
+        self._q.append(_Entry(sweep + self.latency, token))
         self.stats.tokens += 1
         self.stats.max_occupancy = max(self.stats.max_occupancy, len(self._q))
+
+    def on_delivered(self, mid: int, sweep: int) -> None:
+        """The fabric delivered this token's final flit: place the payload
+        on the destination device and open its visibility next sweep."""
+        entry = self._pending.pop(mid)
+        entry.token = _put(entry.token, self.dst_device)
+        entry.vis = sweep + 1
+        self.stats.net_delivered_bytes += entry.nbytes
 
     def pop(self, sweep: int) -> Any:
         if not self.head_visible(sweep):
             self.stats.empty_pops += 1
             raise RuntimeError(
                 f"pop on empty/unripe channel {self.src}->{self.dst}")
-        _, token = self._q.popleft()
-        if self.inter_device and not self.eager_transfer:
+        entry = self._q.popleft()
+        token = entry.token
+        if (self.inter_device and self.transport is None
+                and not self.eager_transfer):
             token = _put(token, self.dst_device)
         return token
 
     def pending_visibility(self) -> List[int]:
-        """Sweeps at which queued tokens become visible (deadlock probe)."""
-        return [vis for vis, _ in self._q]
+        """Sweeps at which queued tokens become visible (deadlock probe);
+        tokens still in the network report no sweep — the transport's
+        ``active`` flag covers them."""
+        return [e.vis for e in self._q if e.vis is not None]
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"FifoChannel({self.src}->{self.dst}, dev {self.src_dev}->"

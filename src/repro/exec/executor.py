@@ -18,17 +18,30 @@ Execution model (synchronous dataflow, one sweep ≈ one pipeline clock):
   reconvergent join starves — which the detector below reports instead of
   silently throttling.
 
+Network fabric (``repro.net``): when the design (or the caller) supplies a
+:class:`~repro.net.fabric.Fabric`, inter-device pushes are packetized into
+flits and routed over the physical links by a
+:class:`~repro.net.transport.FabricTransport` stepped once per sweep —
+channels sharing a link contend for its bandwidth, credits backpressure the
+hops, and a token only becomes visible after its own message delivers.
+``fabric=None`` forces the ideal point-to-point ``jax.device_put`` path
+(the pre-fabric behaviour, bit-identical numerics).  After the last firing
+the network is drained so the per-link byte accounting is complete.
+
 Detection:
 
 * **Hard deadlock** — a sweep fires nothing, and no queued token will ever
-  become visible.  Raises :class:`DeadlockError` listing each unfinished
-  task with the channel that blocks it.
+  become visible (tokens still transiting the fabric count as in flight).
+  Raises :class:`DeadlockError` listing each unfinished task with the
+  channel that blocks it.
 * **FIFO starvation** — a join cannot fire because one in-channel is empty
   while a sibling in-channel sits *at capacity*: the signature of an
   unbalanced cut-set (§4.6).  Transient during pipeline fill never matches
   (balanced depths leave headroom); persistent imbalance accumulates events
   until ``starve_limit`` trips :class:`StarvationError` with the channel
-  that needs more depth.
+  that needs more depth.  When the starved input still has tokens in the
+  network, the wait is *congestion*, not imbalance — it is tallied in
+  ``congestion_waits`` instead of tripping the detector.
 """
 from __future__ import annotations
 
@@ -51,6 +64,11 @@ class DeadlockError(RuntimeError):
 
 class StarvationError(DeadlockError):
     """A join repeatedly starves behind an unbalanced FIFO (§4.6)."""
+
+
+#: Sentinel for ``execute(fabric=...)``: use the design's fabric (pass
+#: ``fabric=None`` explicitly to force the ideal transfer path).
+FROM_DESIGN = object()
 
 
 @dataclasses.dataclass
@@ -80,19 +98,40 @@ def _block(token: Any) -> None:
             leaf.block_until_ready()
 
 
+def _estimate_flit_hops(channels: Sequence[FifoChannel], transport) -> int:
+    """Modeled flit-hops one full iteration pushes into the network (the
+    sweep-bound heuristic; actual token sizes may exceed the model, so the
+    caller pads generously)."""
+    total = 0
+    for fc in channels:
+        if not fc.inter_device:
+            continue
+        gch = fc.graph_channel
+        nbytes = max(gch.bytes_per_step or 0.0, gch.width_bits / 8.0, 1.0)
+        total += (transport.config.flits_for(int(nbytes))
+                  * len(transport.fabric.route(fc.src_dev, fc.dst_dev)))
+    return total
+
+
 def execute(design: CompiledDesign,
             binding: Optional[ProgramBinding] = None, *,
             inputs: Optional[Mapping[str, Any]] = None,
             devices: Optional[Sequence[Any]] = None,
             max_sweeps: Optional[int] = None,
             starve_limit: int = 3,
-            check_starvation: bool = True) -> ExecutionResult:
+            check_starvation: bool = True,
+            fabric: Any = FROM_DESIGN,
+            net_config=None) -> ExecutionResult:
     """Run ``design`` as a multi-device dataflow program.
 
     ``binding`` defaults to the app hook resolved from the graph's name
     (``bind_programs(design.graph, inputs)``); ``inputs`` is that hook's
     numeric spec (shapes / iteration counts / seeds).  ``devices`` overrides
     the physical jax devices backing the partition's logical devices.
+    ``fabric`` defaults to the design's fabric (``CompileOptions.fabric``);
+    pass ``fabric=None`` to force the ideal transfer path or a
+    :class:`~repro.net.fabric.Fabric` to override.  ``net_config`` is the
+    :class:`~repro.net.transport.NetConfig` for the fabric transport.
     """
     if design.partition is None:
         raise ValueError("execute() needs a partitioned design "
@@ -103,12 +142,24 @@ def execute(design: CompiledDesign,
     rep = design.pipeline_report
     phys = _physical_devices(design.partition.num_devices(), devices)
 
+    if fabric is FROM_DESIGN:
+        fabric = design.fabric
+    transport = None
+    if fabric is not None:
+        from ..net.transport import FabricTransport   # deferred: optional
+        if fabric.num_devices != design.cluster.num_devices:
+            raise ValueError(
+                f"fabric spans {fabric.num_devices} devices but the "
+                f"cluster has {design.cluster.num_devices}")
+        transport = FabricTransport(fabric, net_config)
+
     channels: List[FifoChannel] = []
     for i, ch in enumerate(graph.channels):
         latency = 1 + (rep.added_latency.get(i, 0) if rep is not None else 0)
         channels.append(FifoChannel(
             i, ch, assign[ch.src], assign[ch.dst], latency=latency,
-            dst_device=phys[assign[ch.dst] % len(phys)]))
+            dst_device=phys[assign[ch.dst] % len(phys)],
+            transport=transport))
     for i, token in binding.prime.items():
         channels[i].prime(token)
 
@@ -136,10 +187,18 @@ def execute(design: CompiledDesign,
         # Pipeline depth is bounded by tasks × max latency; each of the T
         # firings advances at least one task per sweep barring throttling.
         max_sweeps = 64 + 4 * (T + len(graph.tasks)) * (1 + max_lat)
+        if transport is not None:
+            # The network serializes flits over shared links; transport
+            # progress is guaranteed (>= 1 flit-hop per sweep while
+            # active), so pad by a generous multiple of the modeled
+            # per-iteration flit-hops (actual tokens may exceed the model).
+            est = _estimate_flit_hops(channels, transport)
+            max_sweeps += 256 + 64 * (T + 1) * max(1, est)
 
     fired: Dict[str, int] = {t: 0 for t in graph.tasks}
     starve_events: Dict[str, int] = {}
     starve_detail: List[Dict[str, Any]] = []
+    congestion_waits: Dict[str, int] = {}
     sink_outputs: Dict[str, List[Any]] = {t: [] for t in sinks}
     busy_s: Dict[int, float] = {}
     dev_fired: Dict[int, int] = {}
@@ -171,6 +230,12 @@ def execute(design: CompiledDesign,
                              if not fc.head_visible(sweep)]
                     at_cap = [fc for fc in in_chs[v] if fc.full]
                     if empty and at_cap:
+                        if any(fc.in_flight > 0 for fc in empty):
+                            # Data is coming — the wait is network
+                            # congestion, not a §4.6 depth imbalance.
+                            congestion_waits[v] = \
+                                congestion_waits.get(v, 0) + 1
+                            continue
                         # A bounded FIFO may transiently saturate while the
                         # pipeline fills (bounded by the paths' hop-count
                         # difference) — only persistence past starve_limit
@@ -214,14 +279,20 @@ def execute(design: CompiledDesign,
                 sink_outputs[v].append(out)
             fired[v] += 1
             fired_this_sweep += 1
+        if transport is not None:
+            for mid, ch_index in transport.step(sweep):
+                channels[ch_index].on_delivered(mid, sweep)
         done = all(n >= T for n in fired.values())
         if done:
             break
         if fired_this_sweep == 0:
-            # Tokens still ripening are progress; a silent sweep without
-            # any is a cycle of blocked tasks — diagnose it.
-            if not any(vis > sweep for fc in channels
-                       for vis in fc.pending_visibility()):
+            # Tokens still ripening — or transiting the fabric — are
+            # progress; a silent sweep without any is a cycle of blocked
+            # tasks — diagnose it.
+            ripening = any(vis > sweep for fc in channels
+                           for vis in fc.pending_visibility())
+            in_network = transport is not None and transport.active
+            if not ripening and not in_network:
                 lines = [f"  {t} ({fired[t]}/{T} firings): " +
                          ("; ".join(_blockers(t, sweep)) or "unknown")
                          for t in graph.tasks if fired[t] < T]
@@ -233,14 +304,22 @@ def execute(design: CompiledDesign,
         raise DeadlockError(
             f"executor exceeded max_sweeps={max_sweeps} "
             f"(fired {sum(fired.values())} of {T * len(graph.tasks)} "
-            f"firings) — throughput collapse; check FIFO depths")
+            f"firings) — throughput collapse; check FIFO depths"
+            + (" and fabric link budgets" if transport is not None else ""))
+
+    if transport is not None and transport.active:
+        # Run the network dry (e.g. final back-edge tokens nobody pops) so
+        # the per-link byte conservation identities hold exactly.
+        for mid, ch_index in transport.drain(sweep + 1):
+            channels[ch_index].on_delivered(mid, sweep)
 
     wall = time.perf_counter() - t_start
     report = build_report(
         design=design, channels=channels, iterations=T,
         sweeps=sweep + 1, wall_time_s=wall, device_busy_s=busy_s,
         device_fired=dev_fired, starvation_events=starve_events,
-        starvation_detail=starve_detail)
+        starvation_detail=starve_detail, transport=transport,
+        congestion_waits=congestion_waits)
     outputs = (binding.finalize(sink_outputs)
                if binding.finalize is not None else sink_outputs)
     return ExecutionResult(outputs=outputs, sink_outputs=sink_outputs,

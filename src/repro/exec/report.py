@@ -16,6 +16,18 @@ The two hard agreement checks (:meth:`ExecutionReport.agreement`):
   (width × dist × λ, same arithmetic as the partitioner) reproduces
   ``partition.comm_cost`` bit for bit.  Together they certify that the
   traffic the executor moved is the traffic the solver paid for.
+
+With a network fabric (``repro.net``), two more:
+
+* ``net_delivery_match`` — every byte a channel submitted to the fabric
+  was delivered (the network drained clean);
+* ``link_conservation`` — per-link byte totals sum exactly to the
+  hop-weighted cut-set traffic (Σ_link bytes == Σ_channel bytes × hops):
+  the flit accounting loses and invents nothing.
+
+The ``net`` block of :meth:`summary` carries the per-link
+:class:`~repro.net.congestion.CongestionReport` (utilization, queue highs,
+stalls) next to those identities.
 """
 from __future__ import annotations
 
@@ -44,6 +56,10 @@ class ChannelTrace:
     measured_bytes: int            # actual payload moved across devices
     modeled_bytes: float           # graph bytes_per_step × tokens
     width_bits: int
+    # Network-fabric accounting (0 on the ideal fabric=None path).
+    net_bytes: int = 0             # bytes submitted to the fabric
+    net_delivered_bytes: int = 0   # bytes whose message fully delivered
+    route_hops: int = 0            # fabric route length of this crossing
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -70,6 +86,10 @@ class ExecutionReport:
     analytic_cut_channels: int
     schedule_makespan_s: Optional[float]
     schedule_comm_bytes: Optional[float]       # Σ cut bytes_per_step (model)
+    # Network fabric (None on the ideal path).
+    congestion: Optional[Any] = None           # net.CongestionReport
+    congestion_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    measured_route_comm_cost: float = 0.0      # per-link Eq. 2 over the cut
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -85,6 +105,24 @@ class ExecutionReport:
         return sum(1 for c in self.channels
                    if c.inter_device and c.measured_bytes > 0)
 
+    @property
+    def used_fabric(self) -> bool:
+        return self.congestion is not None
+
+    @property
+    def net_submitted_bytes(self) -> int:
+        return sum(c.net_bytes for c in self.channels)
+
+    @property
+    def net_hop_weighted_bytes(self) -> int:
+        """Σ channel bytes × route hops — what the links must have carried."""
+        return sum(c.net_bytes * c.route_hops for c in self.channels)
+
+    @property
+    def net_link_bytes(self) -> float:
+        return (self.congestion.total_bytes
+                if self.congestion is not None else 0.0)
+
     def device_busy_frac(self) -> Dict[int, float]:
         if self.wall_time_s <= 0:
             return {d: 0.0 for d in self.device_busy_s}
@@ -93,19 +131,26 @@ class ExecutionReport:
 
     def agreement(self) -> Dict[str, bool]:
         """The measured-vs-predicted accounting checks (see module doc)."""
-        return {
+        out = {
             "cut_set_match": (self.measured_cut_channels
                               == self.analytic_cut_channels),
             "comm_cost_match": math.isclose(
                 self.measured_cut_comm_cost, self.analytic_comm_cost,
                 rel_tol=1e-9, abs_tol=1e-9),
         }
+        if self.used_fabric:
+            out["net_delivery_match"] = all(
+                c.net_bytes == c.net_delivered_bytes for c in self.channels)
+            out["link_conservation"] = math.isclose(
+                self.net_link_bytes, float(self.net_hop_weighted_bytes),
+                rel_tol=0.0, abs_tol=0.0)
+        return out
 
     # -- reporting ----------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
         """JSON digest, shaped like ``CompiledDesign.summary()`` sections."""
         inter = [c for c in self.channels if c.inter_device]
-        return {
+        out = {
             "graph": self.graph_name,
             "num_devices": self.num_devices,
             "iterations": self.iterations,
@@ -133,6 +178,16 @@ class ExecutionReport:
             },
             "channels": [c.to_json() for c in inter],
         }
+        if self.used_fabric:
+            out["net"] = {
+                "submitted_bytes": self.net_submitted_bytes,
+                "hop_weighted_bytes": self.net_hop_weighted_bytes,
+                "link_bytes": self.net_link_bytes,
+                "route_comm_cost": self.measured_route_comm_cost,
+                "congestion_waits": dict(self.congestion_waits),
+                **self.congestion.summary(),
+            }
+        return out
 
 
 def build_report(*, design, channels: Sequence[FifoChannel],
@@ -140,15 +195,21 @@ def build_report(*, design, channels: Sequence[FifoChannel],
                  device_busy_s: Mapping[int, float],
                  device_fired: Mapping[int, int],
                  starvation_events: Mapping[str, int],
-                 starvation_detail: Sequence[Dict[str, Any]]
+                 starvation_detail: Sequence[Dict[str, Any]],
+                 transport=None,
+                 congestion_waits: Optional[Mapping[str, int]] = None
                  ) -> ExecutionReport:
     """Assemble the report from live channels + the design's analytics."""
     part, cluster = design.partition, design.cluster
+    fabric = transport.fabric if transport is not None else None
     traces: List[ChannelTrace] = []
     measured_cut_cost = 0.0
     measured_cost = 0.0
+    route_cost = 0.0
     for fc in channels:
         gch = fc.graph_channel
+        hops = (len(fabric.route(fc.src_dev, fc.dst_dev))
+                if fabric is not None and fc.inter_device else 0)
         traces.append(ChannelTrace(
             index=fc.index, src=fc.src, dst=fc.dst,
             src_dev=fc.src_dev, dst_dev=fc.dst_dev,
@@ -160,7 +221,10 @@ def build_report(*, design, channels: Sequence[FifoChannel],
             measured_bytes=fc.stats.measured_bytes,
             modeled_bytes=float(gch.bytes_per_step or gch.width_bits / 8.0)
             * fc.stats.tokens,
-            width_bits=gch.width_bits))
+            width_bits=gch.width_bits,
+            net_bytes=fc.stats.net_bytes,
+            net_delivered_bytes=fc.stats.net_delivered_bytes,
+            route_hops=hops))
         if fc.inter_device and fc.stats.measured_bytes > 0:
             # Eq. 2 with the channel's declared width — must reproduce the
             # partitioner's objective — and with the measured payload.
@@ -169,6 +233,14 @@ def build_report(*, design, channels: Sequence[FifoChannel],
             measured_cost += cluster.comm_cost(
                 fc.src_dev, fc.dst_dev,
                 8.0 * fc.stats.measured_bytes / max(1, fc.stats.tokens))
+            if fabric is not None:
+                # Eq. 2 re-evaluated per routed link (§4.3 calibration).
+                route_cost += fabric.route_cost(
+                    fc.src_dev, fc.dst_dev, gch.width_bits)
+    congestion = None
+    if transport is not None:
+        from ..net.congestion import measure   # deferred: optional layer
+        congestion = measure(transport)
     sched = design.schedule
     return ExecutionReport(
         graph_name=design.graph.name,
@@ -186,4 +258,7 @@ def build_report(*, design, channels: Sequence[FifoChannel],
         measured_comm_cost=measured_cost,
         analytic_cut_channels=len(part.cut_channels),
         schedule_makespan_s=sched.makespan if sched is not None else None,
-        schedule_comm_bytes=sched.comm_bytes if sched is not None else None)
+        schedule_comm_bytes=sched.comm_bytes if sched is not None else None,
+        congestion=congestion,
+        congestion_waits=dict(congestion_waits or {}),
+        measured_route_comm_cost=route_cost)

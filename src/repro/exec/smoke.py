@@ -1,17 +1,17 @@
-"""Executor smoke run (CI): one app on a 2-device host-emulated ring.
+"""Executor smoke run (CI): one app on a host-emulated ring.
 
-Compiles the stencil app onto a 2-FPGA ring, executes it on two emulated
-host devices, asserts numerics parity against the single-device Pallas
-kernel and the measured-vs-predicted comm agreement, and writes the
-ExecutionReport JSON for the CI artifact.
+Compiles the stencil app onto an ``--ndev``-FPGA ring (CI: 4), executes it
+on emulated host devices, asserts numerics parity against the
+single-device Pallas kernel and the measured-vs-predicted comm agreement,
+and writes the ExecutionReport JSON for the CI artifact.
 
-    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.exec.smoke [--app stencil] \
-        [--ndev 2] [--out results/exec_smoke.json]
+        [--ndev 4] [--out results/exec_smoke.json]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=2")
+                      "--xla_force_host_platform_device_count=4")
 # ^ MUST precede any jax import: device count locks on first init.
 
 import argparse
@@ -22,7 +22,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="stencil",
                     choices=["stencil", "pagerank", "knn", "cnn"])
-    ap.add_argument("--ndev", type=int, default=2)
+    ap.add_argument("--ndev", type=int, default=4)
     ap.add_argument("--out", default="results/exec_smoke.json")
     args = ap.parse_args()
 

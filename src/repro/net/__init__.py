@@ -1,0 +1,45 @@
+"""repro.net — the contention-aware network fabric (paper §4.3 congestion
+control, made executable).
+
+Sits between the compiler and the executor:
+
+* :mod:`~repro.net.fabric` lowers every ``Topology`` to explicit directed
+  links (per-link ``Protocol``) with deterministic shortest-path routes;
+* :mod:`~repro.net.transport` packetizes channel pushes into MTU flits and
+  arbitrates links per sweep — fair bandwidth sharing + credit-based
+  backpressure, so co-routed channels genuinely contend;
+* :mod:`~repro.net.congestion` tracks per-link utilization/queueing into a
+  :class:`CongestionReport` (measured from a transport, or projected
+  analytically from a partition);
+* :mod:`~repro.net.calibrate` feeds measurements back into the compiler:
+  per-link Eq. 2 re-evaluation, calibrated pair costs, and the registered
+  ``congestion_feedback`` pass that repartitions around hotspots.
+
+Quickstart (compile → execute through the fabric → congestion report)::
+
+    from repro.compiler import CompileOptions, compile
+    from repro.core import fpga_ring_cluster
+    from repro.net import cluster_fabric
+
+    cluster = fpga_ring_cluster(4)
+    design = compile(graph, cluster,
+                     CompileOptions(balance_kind="LUT",
+                                    fabric=cluster_fabric(cluster)))
+    result = design.execute()          # tokens now move over fabric links
+    result.report.congestion.summary() # per-link bytes / utilization
+
+``python -m repro.net.smoke`` is the CI entry point (2×2 mesh on four
+host-emulated devices; writes the per-link utilization JSON artifact).
+"""
+from .calibrate import (calibrated_pair_cost, congestion_feedback_pass,
+                        lambda_crosscheck, route_comm_cost)
+from .congestion import CongestionReport, LinkUsage, measure, project
+from .fabric import Fabric, Link, SHARED, build_fabric, cluster_fabric
+from .transport import FabricTransport, LinkCounters, NetConfig
+
+__all__ = [
+    "CongestionReport", "Fabric", "FabricTransport", "Link", "LinkCounters",
+    "LinkUsage", "NetConfig", "SHARED", "build_fabric",
+    "calibrated_pair_cost", "cluster_fabric", "congestion_feedback_pass",
+    "lambda_crosscheck", "measure", "project", "route_comm_cost",
+]

@@ -1,0 +1,138 @@
+"""Per-link utilization / queue tracking and the :class:`CongestionReport`.
+
+Two producers, one record:
+
+* :func:`measure` folds a live :class:`~repro.net.transport.FabricTransport`
+  into per-link measured usage after an execution (bytes, flits, busy
+  sweeps, stalls, queue high-water marks, achieved utilization);
+* :func:`project` evaluates the same per-link shape **analytically** from a
+  partition assignment — each cut channel's per-step payload is routed over
+  the fabric and accumulated onto every link of its route, utilization
+  being demanded bytes per step over the link's service per step
+  (``bandwidth × step_time``, the transport's sweep time base).  Note the
+  two numbers answer different questions: projected utilization is
+  **offered load** (how much the cut set *asks* of a link per step — can
+  exceed 1, by the factor the link would slow the pipeline), while the
+  measured figure is **achieved throughput** (flits moved over flit-slots
+  offered, ≤ 1 by construction).  Rank links by either; compare
+  magnitudes across the two only with that in mind.  The projection is
+  what the ``congestion_feedback`` compiler pass consumes: it needs a
+  congestion estimate *before* anything executes.
+
+``hotspots(threshold)`` names the links the §4.3 congestion-control claim
+is about — the ones a repartition must off-load.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from ..core.graph import TaskGraph
+from .fabric import Fabric
+from .transport import FabricTransport, NetConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkUsage:
+    """One link's usage — measured (transport) or projected (compiler)."""
+
+    index: int
+    name: str                      # "src->dst" or "bus"
+    protocol: str
+    bytes: float                   # payload bytes crossing the link
+    utilization: float             # fraction of the link's capacity used
+    flits: int = 0                 # measured only
+    busy_sweeps: int = 0           # measured only
+    stalled_flits: int = 0         # measured only (credit backpressure)
+    escape_moves: int = 0          # measured only (credit-cycle escapes)
+    peak_queue: int = 0            # measured only (ingress flit HWM)
+    channels: int = 0              # projected only: cut channels routed here
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionReport:
+    """Per-link usage + aggregates for one execution or one projection."""
+
+    kind: str                      # "measured" | "projected"
+    links: List[LinkUsage]
+    sweeps: int                    # measured: transport sweeps; projected: 0
+    total_bytes: float             # Σ per-link bytes (hop-weighted traffic)
+
+    @property
+    def max_utilization(self) -> float:
+        return max((l.utilization for l in self.links), default=0.0)
+
+    def hotspots(self, threshold: float) -> List[LinkUsage]:
+        """Links over the utilization threshold, hottest first."""
+        return sorted((l for l in self.links if l.utilization > threshold),
+                      key=lambda l: -l.utilization)
+
+    def link(self, index: int) -> LinkUsage:
+        return self.links[index]
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "kind": self.kind,
+            "sweeps": self.sweeps,
+            "total_link_bytes": self.total_bytes,
+            "max_utilization": self.max_utilization,
+            "links": [l.to_json() for l in self.links],
+        }
+
+
+def measure(transport: FabricTransport) -> CongestionReport:
+    """Measured per-link usage from a (drained) transport."""
+    links = [LinkUsage(
+        index=l.index, name=l.name, protocol=l.protocol.name,
+        bytes=float(c.bytes), utilization=transport.utilization(l.index),
+        flits=c.flits, busy_sweeps=c.busy_sweeps,
+        stalled_flits=c.stalled_flits, escape_moves=c.escape_moves,
+        peak_queue=c.peak_queue)
+        for l, c in zip(transport.fabric.links, transport.counters)]
+    return CongestionReport(
+        kind="measured", links=links, sweeps=transport.sweeps_run,
+        total_bytes=float(sum(l.bytes for l in links)))
+
+
+def _channel_step_bytes(ch) -> float:
+    return float(ch.bytes_per_step or ch.width_bits / 8.0)
+
+
+def project(graph: TaskGraph, assignment: Dict[str, int], fabric: Fabric, *,
+            step_time_s: Optional[float] = None,
+            channels: Optional[Sequence] = None) -> CongestionReport:
+    """Analytic per-link traffic for a partition assignment.
+
+    Each cut channel demands ``bytes_per_step`` (falling back to
+    ``width_bits/8``) once per step; a link serves
+    ``bandwidth × step_time`` bytes per step (``step_time_s`` defaults to
+    the transport's ``NetConfig.sweep_time_s``).  The result is *offered
+    load*: > 1 means the cut set asks more of the link than one step can
+    carry — the executor slows down by that factor on the hot link (the
+    *measured* utilization, by contrast, saturates at 1).
+    """
+    if step_time_s is None:
+        step_time_s = NetConfig().sweep_time_s
+    per_link_bytes = [0.0] * len(fabric.links)
+    per_link_channels = [0] * len(fabric.links)
+    for ch in (channels if channels is not None else graph.channels):
+        sd, dd = assignment[ch.src], assignment[ch.dst]
+        if sd == dd:
+            continue
+        step_bytes = _channel_step_bytes(ch)
+        for li in fabric.route(sd, dd):
+            per_link_bytes[li] += step_bytes
+            per_link_channels[li] += 1
+    links = [LinkUsage(
+        index=l.index, name=l.name, protocol=l.protocol.name,
+        bytes=per_link_bytes[l.index],
+        utilization=(per_link_bytes[l.index]
+                     / (l.protocol.bandwidth_Bps * step_time_s)),
+        channels=per_link_channels[l.index])
+        for l in fabric.links]
+    return CongestionReport(
+        kind="projected", links=links, sweeps=0,
+        total_bytes=float(sum(per_link_bytes)))

@@ -1,0 +1,269 @@
+"""Flit transport over a :class:`~repro.net.fabric.Fabric` — contention,
+fair sharing, credit-based backpressure.
+
+A channel push of ``N`` bytes becomes a **message** of ``ceil(N / mtu)``
+MTU-sized flits that must traverse every link of the message's route in
+order.  Each executor sweep, :meth:`FabricTransport.step` arbitrates every
+link:
+
+* **bandwidth sharing** — a link moves at most ``budget_flits`` per sweep
+  (``bandwidth × sweep_time / mtu``, floor 1) and splits them round-robin
+  across the messages queued on it, oldest message first — two channels
+  crossing the same physical link genuinely halve each other's throughput;
+* **credit-based backpressure** — each link's ingress buffer holds at most
+  ``credits`` flits; a flit advances to the next hop only when a credit is
+  free there (the stall is counted), and delivery off the final hop always
+  drains (the destination FIFO slot was reserved at push time);
+* **one hop per sweep** — moves are staged and applied after the link loop,
+  so a flit's transit time is at least its hop count (matching Eq. 3's
+  ``dist``) plus any queueing delay.
+
+Progress is guaranteed: if a sweep moves nothing while messages are active
+(a credit cycle — possible on ring/torus routes), the oldest message's
+head flit advances anyway, counted as an ``escape`` move (the software
+analogue of a NoC escape virtual channel).
+
+Byte accounting is exact: message flits cross each route link in FIFO
+order, the last flit carrying the partial remainder, so once the network
+drains, per-link byte totals satisfy ``Σ_link bytes == Σ_msg bytes × hops``
+and per-channel delivered bytes equal the bytes submitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .fabric import Fabric
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """Fabric-transport knobs (deterministic; defaults suit CI emulation)."""
+
+    mtu_bytes: int = 4096          # flit payload (jumbo-frame-ish)
+    sweep_time_s: float = 1e-6     # wall time one executor sweep models
+    link_credits: int = 8          # per-link ingress buffer, in flits
+
+    def flits_for(self, nbytes: int) -> int:
+        return max(1, -(-int(nbytes) // self.mtu_bytes))
+
+    def budget_flits(self, bandwidth_Bps: float) -> int:
+        return max(1, int(bandwidth_Bps * self.sweep_time_s
+                          // self.mtu_bytes))
+
+
+@dataclasses.dataclass
+class LinkCounters:
+    """Measured life of one link across an execution."""
+
+    bytes: int = 0                 # payload bytes that crossed the link
+    flits: int = 0                 # flits that crossed the link
+    busy_sweeps: int = 0           # sweeps with >= 1 flit crossing
+    stalled_flits: int = 0         # flit-moves blocked on downstream credits
+    escape_moves: int = 0          # credit-cycle escapes (see module doc)
+    peak_queue: int = 0            # ingress-buffer high-water mark, in flits
+
+
+@dataclasses.dataclass
+class _Message:
+    mid: int
+    channel_index: int
+    route: Tuple[int, ...]
+    total_bytes: int
+    flits_total: int
+    submitted_sweep: int
+    src_queue: int                 # flits not yet injected into route[0]
+    at_hop: List[int]              # flits queued at each hop's link
+    crossed: List[int]             # flits that have crossed each hop's link
+    delivered_flits: int = 0
+    delivered_sweep: Optional[int] = None
+
+    def done(self) -> bool:
+        return self.delivered_flits >= self.flits_total
+
+
+class FabricTransport:
+    """Per-execution mutable transport state over one immutable fabric."""
+
+    def __init__(self, fabric: Fabric, config: Optional[NetConfig] = None):
+        self.fabric = fabric
+        self.config = config or NetConfig()
+        self.counters: List[LinkCounters] = [LinkCounters()
+                                             for _ in fabric.links]
+        self._budget = [self.config.budget_flits(l.protocol.bandwidth_Bps)
+                        for l in fabric.links]
+        self._occupancy: List[int] = [0] * len(fabric.links)
+        self._messages: Dict[int, _Message] = {}
+        self._next_mid = 0
+        self.sweeps_run = 0
+        self.total_submitted_bytes = 0
+        self.total_delivered_bytes = 0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, channel_index: int, src_dev: int, dst_dev: int,
+               nbytes: int, sweep: int) -> int:
+        """Packetize one channel push into a routed message; returns its id."""
+        route = self.fabric.route(src_dev, dst_dev)
+        if not route:
+            raise ValueError(f"channel {channel_index}: no network route for "
+                             f"a co-located pair {src_dev}->{dst_dev}")
+        flits = self.config.flits_for(nbytes)
+        mid = self._next_mid
+        self._next_mid += 1
+        self._messages[mid] = _Message(
+            mid=mid, channel_index=channel_index, route=route,
+            total_bytes=int(nbytes), flits_total=flits,
+            submitted_sweep=sweep, src_queue=flits,
+            at_hop=[0] * len(route), crossed=[0] * len(route))
+        self.total_submitted_bytes += int(nbytes)
+        self._inject()
+        return mid
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return bool(self._messages)
+
+    # (Per-channel in-flight tracking lives on FifoChannel._pending — the
+    # executor's congestion gating reads it there.)
+
+    # -- mechanics ----------------------------------------------------------
+    def _flit_bytes(self, m: _Message, crossed_before: int) -> int:
+        """Bytes of the next flit to cross, flits crossing in FIFO order
+        (the final flit carries the partial remainder — exact accounting)."""
+        upper = min((crossed_before + 1) * self.config.mtu_bytes,
+                    m.total_bytes)
+        lower = min(crossed_before * self.config.mtu_bytes, m.total_bytes)
+        return upper - lower
+
+    def _inject(self) -> None:
+        """Move source-queued flits into route[0] ingress while credits last
+        (injection is FIFO in message-id order — submission order)."""
+        for m in sorted(self._messages.values(), key=lambda m: m.mid):
+            if m.src_queue <= 0:
+                continue
+            first = m.route[0]
+            room = self.config.link_credits - self._occupancy[first]
+            take = min(m.src_queue, room)
+            if take > 0:
+                m.src_queue -= take
+                m.at_hop[0] += take
+                self._occupancy[first] += take
+                self.counters[first].peak_queue = max(
+                    self.counters[first].peak_queue, self._occupancy[first])
+
+    def _advance(self, m: _Message, hop: int, sweep: int,
+                 moved: List[Tuple[_Message, int]], escape: bool) -> None:
+        li = m.route[hop]
+        m.at_hop[hop] -= 1
+        self._occupancy[li] -= 1
+        bts = self._flit_bytes(m, m.crossed[hop])
+        m.crossed[hop] += 1
+        c = self.counters[li]
+        c.flits += 1
+        c.bytes += bts
+        if escape:
+            c.escape_moves += 1
+        if hop + 1 < len(m.route):
+            moved.append((m, hop + 1))      # staged: lands next link loop end
+            nxt = m.route[hop + 1]
+            self._occupancy[nxt] += 1       # credit consumed immediately
+            self.counters[nxt].peak_queue = max(
+                self.counters[nxt].peak_queue, self._occupancy[nxt])
+        else:
+            m.delivered_flits += 1
+            self.total_delivered_bytes += bts
+            if m.done():
+                m.delivered_sweep = sweep
+
+    def step(self, sweep: int) -> List[Tuple[int, int]]:
+        """Arbitrate every link for one sweep.
+
+        Returns ``[(message_id, channel_index)]`` for messages whose final
+        flit was delivered this sweep (completion order is deterministic).
+        """
+        self.sweeps_run += 1
+        moved: List[Tuple[_Message, int]] = []   # staged inter-hop arrivals
+        crossed_links: List[int] = []
+        any_flit_moved = False
+        order = sorted(self._messages.values(), key=lambda m: m.mid)
+        for li, link in enumerate(self.fabric.links):
+            # Messages with flits queued on this link, oldest first.
+            queued = [m for m in order
+                      if any(m.route[h] == li and m.at_hop[h] > 0
+                             for h in range(len(m.route)))]
+            if not queued:
+                continue
+            budget = self._budget[li]
+            sent_on_link = 0
+            # Round-robin one flit per message per lap until budget or
+            # queues (or credits) run out.
+            progressing = True
+            blocked: set = set()
+            while budget > 0 and progressing:
+                progressing = False
+                for m in queued:
+                    if budget <= 0:
+                        break
+                    if m.mid in blocked:
+                        continue
+                    hop = next((h for h in range(len(m.route))
+                                if m.route[h] == li and m.at_hop[h] > 0),
+                               None)
+                    if hop is None:
+                        continue
+                    if hop + 1 < len(m.route):
+                        nxt = m.route[hop + 1]
+                        if self._occupancy[nxt] >= self.config.link_credits:
+                            self.counters[li].stalled_flits += 1
+                            blocked.add(m.mid)
+                            continue
+                    self._advance(m, hop, sweep, moved, escape=False)
+                    budget -= 1
+                    sent_on_link += 1
+                    progressing = True
+            if sent_on_link:
+                crossed_links.append(li)
+                any_flit_moved = True
+        # Escape valve: a credit cycle (ring/torus routes) could otherwise
+        # stall every link forever — force the oldest queued flit through.
+        if not any_flit_moved and self._messages:
+            for m in order:
+                hop = next((h for h in range(len(m.route))
+                            if m.at_hop[h] > 0), None)
+                if hop is not None:
+                    self._advance(m, hop, sweep, moved, escape=True)
+                    crossed_links.append(m.route[hop])
+                    break
+        for li in set(crossed_links):
+            self.counters[li].busy_sweeps += 1
+        # Staged arrivals land after the link loop: one hop per sweep.
+        for m, hop in moved:
+            m.at_hop[hop] += 1
+        self._inject()
+        completed = [(m.mid, m.channel_index)
+                     for m in order
+                     if m.done() and m.delivered_sweep == sweep]
+        for mid, _ in completed:
+            del self._messages[mid]
+        return completed
+
+    def drain(self, sweep: int, *, limit: int = 1_000_000
+              ) -> List[Tuple[int, int]]:
+        """Run the network dry (post-execution accounting completeness)."""
+        completed: List[Tuple[int, int]] = []
+        while self.active:
+            completed.extend(self.step(sweep))
+            sweep += 1
+            limit -= 1
+            if limit <= 0:  # pragma: no cover - progress is guaranteed
+                raise RuntimeError("transport failed to drain")
+        return completed
+
+    # -- reporting ----------------------------------------------------------
+    def utilization(self, link_index: int) -> float:
+        """Crossed flits over offered flit-sweeps (0 when never stepped)."""
+        if self.sweeps_run == 0:
+            return 0.0
+        cap = self._budget[link_index] * self.sweeps_run
+        return self.counters[link_index].flits / cap if cap else 0.0

@@ -13,7 +13,11 @@ from repro.core.partitioner import partition
 
 def small_cluster(n=2, lut=100.0, thresh=0.7):
     dev = DeviceSpec("d", {"LUT": lut})
-    return Cluster(dev, Ring(n), utilization_threshold=thresh)
+    # Raw-die capacities: the hand-counted expectations below (e.g. "cap
+    # 180 → max 3 tasks") predate interconnect-IP overhead charging, which
+    # has its own coverage in test_net.py.
+    return Cluster(dev, Ring(n), utilization_threshold=thresh,
+                   charge_interconnect_overhead=False)
 
 
 def test_chain_partition_is_contiguous():

@@ -65,3 +65,68 @@ def test_ring_triangle_inequality(n, a, b, c):
     t = Ring(n)
     i, j, k = a % n, b % n, c % n
     assert t.dist(i, k) <= t.dist(i, j) + t.dist(j, k)
+
+
+# ---------------------------------------------------------------------------
+# links() / neighbors() defaults + fabric-backed diameter().
+# ---------------------------------------------------------------------------
+
+def test_ring_links_and_neighbors():
+    t = Ring(4)
+    assert sorted(t.neighbors(0)) == [1, 3]          # wraps
+    assert t.links() == [(0, 1), (0, 3), (1, 2), (2, 3)]
+
+
+def test_daisy_chain_links():
+    t = DaisyChain(4)
+    assert t.links() == [(0, 1), (1, 2), (2, 3)]
+    assert t.neighbors(0) == [1] and sorted(t.neighbors(2)) == [1, 3]
+
+
+def test_torus_wraparound_neighbors():
+    m = Mesh2D(3, 3, torus=True)
+    # Corner 0 = (0,0): grid neighbors (0,1),(1,0) + wraps (0,2),(2,0).
+    assert sorted(m.neighbors(0)) == [1, 2, 3, 6]
+    assert len(m.links()) == 2 * 9                   # 2 cables per torus node
+    flat = Mesh2D(3, 3)
+    assert sorted(flat.neighbors(0)) == [1, 3]       # no wraparound
+
+
+def test_hypercube_bit_flip_neighbors():
+    h = Hypercube(3)
+    assert sorted(h.neighbors(0b000)) == [0b001, 0b010, 0b100]
+    assert sorted(h.neighbors(0b101)) == [0b001, 0b100, 0b111]
+    assert len(h.links()) == 3 * 8 // 2              # dim × n / 2 cables
+
+
+def test_star_hub_links():
+    s = Star(5)
+    assert s.links() == [(0, 1), (0, 2), (0, 3), (0, 4)]
+    assert s.neighbors(3) == [0]                     # spokes see only the hub
+    assert sorted(s.neighbors(0)) == [1, 2, 3, 4]
+
+
+def test_bus_is_shared_medium():
+    b = Bus(4)
+    assert b.shared_medium
+    assert sorted(b.neighbors(2)) == [0, 1, 3]       # every pair one hop
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 5), st.integers(2, 10))
+def test_diameter_matches_exhaustive_dist_scan(kind, n):
+    """The fabric-sweep diameter() equals the O(n²) dist() definition."""
+    topo = TOPOS[kind](n)
+    m = topo.num_devices
+    exhaustive = max(topo.dist(i, j) for i in range(m) for j in range(m))
+    assert topo.diameter() == exhaustive
+    assert topo.diameter() == exhaustive             # memoized second call
+
+
+def test_diameter_falls_back_for_unrealizable_metrics():
+    class Teleport(Ring):
+        """dist()==2 everywhere: no dist()==1 links exist to route over."""
+        def dist(self, i, j):
+            return 0 if i == j else 2
+
+    assert Teleport(5).diameter() == 2
