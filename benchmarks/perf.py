@@ -28,6 +28,15 @@ the ideal path; the λ cross-check routes identical traffic over an Ethernet
 and a PCIe Gen3x16 ring and asserts the 12.5× cost ratio within 1e-9; and
 the hot-spotted-bus demo must trigger the congestion_feedback repartition
 and measurably reduce max link utilization.  All asserted in both modes.
+
+HBM banks (the ``mem`` section, schema v4): the memory-bound apps (axpy /
+dot / gemv / axpydot) execute with their operands arriving through the
+``repro.mem`` bank model — numerics must be bit-identical both to the
+ideal-memory path and to the monolithic Pallas reference, and the bank
+accounting must conserve bytes exactly (Σ per-bank bytes == Σ
+memory-channel delivered bytes); and the hot-bank demo (every reader
+pinned to bank 0) must trigger the memory_feedback re-map and reduce max
+projected bank utilization by ≥ 10×.  All asserted in both modes.
 """
 from __future__ import annotations
 
@@ -57,6 +66,12 @@ EXEC_FULL_CONFIGS = EXEC_SMOKE_CONFIGS + [("pagerank", 4), ("cnn", 4)]
 # Configs executed THROUGH the network fabric (schema v3 `net` section).
 NET_SMOKE_CONFIGS = [("stencil", 2)]
 NET_FULL_CONFIGS = [("stencil", 4), ("pagerank", 4)]
+
+# Memory-bound configs executed through the HBM bank model (schema v4
+# `mem` section).  The acceptance bar is all four apps bit-identical, so
+# even smoke runs the full set (they are seconds-scale at 2 devices).
+MEM_SMOKE_CONFIGS = [("axpy", 2), ("dot", 2), ("gemv", 2), ("axpydot", 2)]
+MEM_FULL_CONFIGS = MEM_SMOKE_CONFIGS + [("axpy", 4), ("axpydot", 4)]
 
 # Keeps pagerank×8 (65 channels × 28 pairs = 1820; exact branch-and-cut
 # needs >60 s) and knn×8 (192 × 28 = 5376) on the recursive-bisect path in
@@ -272,6 +287,93 @@ def bench_congestion_feedback() -> Dict[str, object]:
     return d
 
 
+def bench_mem_exec(app: str, ndev: int) -> Dict[str, object]:
+    """Execute a memory-bound app through the repro.mem bank model: bit
+    identity vs the ideal-memory path AND the monolithic Pallas reference,
+    exact bank byte conservation, measured per-bank utilization."""
+    import jax.numpy as jnp
+
+    from repro.compiler import compile as tapa_compile
+    from repro.core import fpga_ring_cluster
+    from repro.exec import bind_programs, execute
+    from repro.mem import MemConfig
+
+    mod = _app_module(app)
+    graph = mod.build_graph(ndev)
+    # Small banks so the benchmark shapes genuinely queue (several sweeps
+    # per request) instead of completing every burst in one sweep.
+    config = MemConfig(banks_per_device=4, bank_bandwidth_Bps=2e9,
+                       credits=4, burst_bytes=512)
+    design = tapa_compile(graph, fpga_ring_cluster(ndev),
+                          _options(mod, ndev).replace(
+        mem=config, floorplan_devices=None,
+        passes=("normalize_units", "partition", "memory_feedback",
+                "pipeline_interconnect", "schedule")))
+    binding = bind_programs(graph)
+    banked = execute(design, binding)
+    ideal = execute(design, bind_programs(graph), mem=None)
+    if not bool(jnp.all(banked.outputs == ideal.outputs)):
+        raise AssertionError(
+            f"{graph.name}: bank-modeled numerics diverged from ideal path")
+    if not bool(jnp.all(banked.outputs == binding.reference())):
+        raise AssertionError(
+            f"{graph.name}: bank-modeled numerics diverged from the "
+            f"monolithic Pallas reference (atol is 0.0 — exact)")
+    rep = banked.report
+    agree = rep.agreement()
+    if not all(agree.values()):
+        raise AssertionError(f"{graph.name}: bank accounting: {agree}")
+    mem = rep.mem_contention
+    return {
+        "app": app, "ndev": ndev, "graph": graph.name,
+        "bit_identical": True,
+        "sweeps_bank": rep.sweeps, "sweeps_ideal": ideal.report.sweeps,
+        "mem_waits": sum(rep.mem_waits.values()),
+        "bank_bytes": rep.mem_bank_bytes,
+        "delivered_bytes": rep.mem_delivered_bytes,
+        "requested_bytes": rep.mem_requested_bytes,
+        "max_bank_utilization": mem.max_utilization,
+        "banks": [b.to_json() for b in mem.banks if b.bytes > 0],
+        "agreement": agree,
+    }
+
+
+def bench_memory_feedback() -> Dict[str, object]:
+    """Hot-bank demo: 16 readers all pinned to HBM bank 0 of one device;
+    the memory_feedback re-map must spread them and reduce max projected
+    bank utilization by ≥ 10× (asserted in both modes)."""
+    from repro.compiler import CompileOptions, compile as tapa_compile
+    from repro.core import ResourceProfile, Task, TaskGraph, \
+        fpga_ring_cluster
+    from repro.mem import MemConfig
+
+    config = MemConfig(banks_per_device=16, bank_bandwidth_Bps=1e9,
+                       credits=8, burst_bytes=512)
+    # Each reader demands 80% of one bank's per-step service; 16 of them
+    # pinned on bank 0 project to 12.8× overload until the re-map spreads
+    # them one-per-bank (0.8 each): a 16× reduction.
+    per_task = 0.8 * config.bank_bandwidth_Bps * config.sweep_time_s
+    g = TaskGraph("hotbank-bench")
+    for i in range(16):
+        g.add_task(Task(f"rd{i}", ResourceProfile({"LUT": 1000}),
+                        hbm_bytes=per_task, meta={"hbm_bank": 0}))
+    g.add_task(Task("collect", ResourceProfile({"LUT": 1000})))
+    for i in range(16):
+        g.add_channel(f"rd{i}", "collect", width_bits=32, bytes_per_step=4.0)
+    design = tapa_compile(g, fpga_ring_cluster(1), CompileOptions(
+        balance_kind="LUT", balance_tol=0.8, mem=config,
+        passes=("normalize_units", "partition", "memory_feedback")))
+    d = dict(design.pass_record("memory_feedback").detail)
+    reduction = d["max_utilization_before"] / \
+        max(d["max_utilization_after"], 1e-12)
+    if not d["remapped"] or reduction < 10.0:
+        raise AssertionError(
+            f"hot bank did not trigger a >=10x utilization-reducing "
+            f"re-map: {reduction:.2f}x, {d}")
+    d["reduction"] = round(reduction, 2)
+    return d
+
+
 def bench_kl_refine(nv: int = 256, ndev: int = 8,
                     avg_degree: int = 8) -> Dict[str, object]:
     """Synthetic-graph micro-benchmark of the PR 3 kl_refine rewrite."""
@@ -389,6 +491,22 @@ def main() -> int:
           f"{hot['max_utilization_after']:.3f} "
           f"({hot['method']})")
 
+    mem_configs = MEM_SMOKE_CONFIGS if args.smoke else MEM_FULL_CONFIGS
+    mem_records: List[Dict[str, object]] = []
+    for app, ndev in mem_configs:
+        rec = bench_mem_exec(app, ndev)
+        mem_records.append(rec)
+        print(f"[mem  {rec['graph']:24s}] bank_bytes {rec['bank_bytes']:.0f} "
+              f"== delivered {rec['delivered_bytes']} "
+              f"max_util {rec['max_bank_utilization']:.3f} "
+              f"({rec['sweeps_bank']} sweeps vs "
+              f"{rec['sweeps_ideal']} ideal, {rec['mem_waits']} waits)")
+    hotbank = bench_memory_feedback()
+    print(f"[mem  memory-feedback       ] bank max util "
+          f"{hotbank['max_utilization_before']:.1f} -> "
+          f"{hotbank['max_utilization_after']:.3f} "
+          f"({hotbank['reduction']}x, method {hotbank['method']})")
+
     kl = bench_kl_refine()
     print(f"[kl_refine {kl['nodes']}n/{kl['ndev']}d] ref {kl['ref_s']}s "
           f"vec {kl['vec_s']}s -> {kl['speedup']}x")
@@ -406,7 +524,7 @@ def main() -> int:
                 f"model build speedup {build['speedup']} below 1.5x floor")
 
     out = {
-        "schema": "bench-compile/v3",
+        "schema": "bench-compile/v4",
         "created_unix": time.time(),
         "mode": "smoke" if args.smoke else "full",
         "configs": records,
@@ -419,6 +537,11 @@ def main() -> int:
             "lambda_crosscheck": lam_check,
             "congestion_feedback": hot,
         },
+        # HBM banks (repro.mem): apps executed through banked memory.
+        "mem": {
+            "bank_exec": mem_records,
+            "memory_feedback": hotbank,
+        },
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)
@@ -426,7 +549,8 @@ def main() -> int:
     print(f"\nPERF RESULT: {len(records)} configs, all objectives match "
           f"legacy; {len(exec_records)} executed designs agree with the "
           f"comm_cost accounting; {len(net_records)} fabric-routed designs "
-          f"conserve per-link bytes; wrote {args.out}")
+          f"conserve per-link bytes; {len(mem_records)} bank-modeled apps "
+          f"bit-identical to their Pallas references; wrote {args.out}")
     return 0
 
 

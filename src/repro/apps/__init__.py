@@ -1,10 +1,14 @@
-"""The paper's four benchmark applications (§5): Stencil (Dilate), PageRank,
-KNN, systolic CNN — as (a) TaskGraphs consumed by the real partitioner,
+"""The paper's benchmark applications: Stencil (Dilate), PageRank, KNN,
+systolic CNN (§5) — as (a) TaskGraphs consumed by the real partitioner,
 (b) mechanistic latency models reproducing Table 3 / §5.7, and (c) runnable
-JAX numerics on the Pallas kernels.
+JAX numerics on the Pallas kernels — plus the memory-bound HBM workload set
+(Axpy, Dot, Gemv, AxpyDot) whose shard tasks read operands through
+``async_mmap`` memory channels (repro.mem).
 """
-from . import cnn, knn, pagerank, stencil
+from . import axpy, axpydot, cnn, dot, gemv, knn, pagerank, stencil
 
-APPS = {"stencil": stencil, "pagerank": pagerank, "knn": knn, "cnn": cnn}
+APPS = {"stencil": stencil, "pagerank": pagerank, "knn": knn, "cnn": cnn,
+        "axpy": axpy, "dot": dot, "gemv": gemv, "axpydot": axpydot}
 
-__all__ = ["APPS", "stencil", "pagerank", "knn", "cnn"]
+__all__ = ["APPS", "stencil", "pagerank", "knn", "cnn",
+           "axpy", "dot", "gemv", "axpydot"]

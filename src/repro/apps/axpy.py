@@ -1,0 +1,110 @@
+"""Axpy (z = a·x + y) — the first memory-bound HBM workload.
+
+Level-1 BLAS moves three bytes of HBM traffic per FLOP: the design is
+bank-limited, never compute- or link-limited (the FpgaHbmForDaCe workload
+set the ROADMAP names).  The graph shards the vectors row-wise, one task
+per shard, each reading its x/y shards through its own ``async_mmap``
+memory streams (``ProgramBinding.mem_reads``) and streaming the result to
+a collect sink over tiny FIFO channels — banks saturate, links idle.
+
+Bit-tightness contract: each shard task runs the *same Pallas op* on its
+shard (one grid step) that the reference runs over the full array with
+``block_rows == shard rows``; concatenation in shard order reproduces the
+monolithic kernel bit for bit (see ``repro.kernels.hbm_blas``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ResourceProfile, Task, TaskGraph
+
+# Modeled (full-scale) problem: 2^26 float32 elements per vector.
+N_FULL = 1 << 26
+ELEM_BYTES = 4
+VEC_BYTES = N_FULL * ELEM_BYTES
+
+
+def shards_for(ndev: int) -> int:
+    return 2 * max(1, ndev)
+
+
+def build_graph(ndev: int) -> TaskGraph:
+    """S = 2·ndev shard tasks, each an HBM reader, plus a collect sink."""
+    S = shards_for(ndev)
+    g = TaskGraph(f"axpy-s{S}x{ndev}")
+    shard_bytes = VEC_BYTES // S
+    for i in range(S):
+        g.add_task(Task(
+            f"axpy{i}",
+            ResourceProfile({"LUT": 18000, "DSP": 16, "BRAM": 8}),
+            hbm_bytes=2 * shard_bytes,        # x shard + y shard per firing
+            meta={"shard": i}))
+    g.add_task(Task("collect",
+                    ResourceProfile({"LUT": 4000, "DSP": 0, "BRAM": 4})))
+    for i in range(S):
+        g.add_channel(f"axpy{i}", "collect", width_bits=512,
+                      bytes_per_step=shard_bytes)
+    return g
+
+
+def _spec(graph: TaskGraph, spec) -> Dict[str, object]:
+    spec = dict(spec or {})
+    S = sum(1 for t in graph.tasks if t.startswith("axpy"))
+    rows = spec.get("rows", 16)
+    assert rows % S == 0, (rows, S)
+    return {"S": S, "rows": rows, "lanes": spec.get("lanes", 128),
+            "br": rows // S, "streams": spec.get("streams", 3),
+            "seed": spec.get("seed", 0), "a": spec.get("a", 1.5)}
+
+
+def make_streams(sp: Dict[str, object], names=("x", "y")) -> Dict[str, List]:
+    """Per-firing full-size operand arrays, deterministic in the seed."""
+    rng = jax.random.PRNGKey(sp["seed"])
+    out: Dict[str, List] = {}
+    for j, name in enumerate(names):
+        out[name] = [jax.random.normal(
+            jax.random.fold_in(rng, 7919 * j + t),
+            (sp["rows"], sp["lanes"]), jnp.float32)
+            for t in range(sp["streams"])]
+    return out
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    """Executable binding (repro.exec hook): async-read shards + collect."""
+    from ..exec.programs import ProgramBinding
+    from ..kernels import axpy_op
+
+    sp = _spec(graph, spec)
+    S, br, a = sp["S"], sp["br"], sp["a"]
+    ops = make_streams(sp)
+
+    def shard_slice(arr, i):
+        return arr[i * br:(i + 1) * br]
+
+    mem_reads = {
+        f"axpy{i}": {"x": [shard_slice(x, i) for x in ops["x"]],
+                     "y": [shard_slice(y, i) for y in ops["y"]]}
+        for i in range(S)}
+
+    def shard_body(inputs):
+        return axpy_op(a, inputs["x"], inputs["y"], block_rows=br)
+
+    def collect_body(inputs):
+        return jnp.concatenate([inputs[f"axpy{i}"] for i in range(S)],
+                               axis=0)
+
+    programs = {f"axpy{i}": shard_body for i in range(S)}
+    programs["collect"] = collect_body
+
+    def reference():
+        return jnp.stack([axpy_op(a, x, y, block_rows=br)
+                          for x, y in zip(ops["x"], ops["y"])])
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=sp["streams"],
+        mem_reads=mem_reads,
+        finalize=lambda sinks: jnp.stack(sinks["collect"]),
+        reference=reference, atol=0.0)

@@ -1,0 +1,99 @@
+"""AxpyDot (r = (a·x + y)·w) — the fused two-stage HBM workload.
+
+The interesting composition: an axpy shard stage feeds a dot shard stage
+over real FIFO channels while *both* stages read their own operands from
+HBM banks — memory channels and inter-task channels active at once, the
+configuration the bank/link dual accounting exists for.  The reduce sink
+folds the partials in shard order (``fold_partials``), matching the fused
+monolithic ``axpydot_op`` bit for bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import ResourceProfile, Task, TaskGraph
+from .axpy import ELEM_BYTES, VEC_BYTES, make_streams, shards_for
+
+
+def build_graph(ndev: int) -> TaskGraph:
+    S = shards_for(ndev)
+    g = TaskGraph(f"axpydot-s{S}x{ndev}")
+    shard_bytes = VEC_BYTES // S
+    for i in range(S):
+        g.add_task(Task(
+            f"axpy{i}",
+            ResourceProfile({"LUT": 18000, "DSP": 16, "BRAM": 8}),
+            hbm_bytes=2 * shard_bytes,           # x + y shards
+            meta={"shard": i}))
+        g.add_task(Task(
+            f"dot{i}",
+            ResourceProfile({"LUT": 14000, "DSP": 24, "BRAM": 8}),
+            hbm_bytes=shard_bytes,               # w shard
+            meta={"shard": i}))
+    g.add_task(Task("reduce",
+                    ResourceProfile({"LUT": 3000, "DSP": 8, "BRAM": 2})))
+    for i in range(S):
+        g.add_channel(f"axpy{i}", f"dot{i}", width_bits=512,
+                      bytes_per_step=shard_bytes)
+        g.add_channel(f"dot{i}", "reduce", width_bits=32,
+                      bytes_per_step=ELEM_BYTES)
+    return g
+
+
+def _spec(graph: TaskGraph, spec):
+    spec = dict(spec or {})
+    S = sum(1 for t in graph.tasks if t.startswith("axpy"))
+    rows = spec.get("rows", 16)
+    assert rows % S == 0, (rows, S)
+    return {"S": S, "rows": rows, "lanes": spec.get("lanes", 128),
+            "br": rows // S, "streams": spec.get("streams", 3),
+            "seed": spec.get("seed", 0), "a": spec.get("a", 1.5)}
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    from ..exec.programs import ProgramBinding
+    from ..kernels import (axpy_op, axpydot_op, dot_partials_op,
+                           fold_partials)
+
+    sp = _spec(graph, spec)
+    S, br, a = sp["S"], sp["br"], sp["a"]
+    ops = make_streams(sp, names=("x", "y", "w"))
+
+    def shard_slice(arr, i):
+        return arr[i * br:(i + 1) * br]
+
+    mem_reads = {}
+    for i in range(S):
+        mem_reads[f"axpy{i}"] = {
+            "x": [shard_slice(x, i) for x in ops["x"]],
+            "y": [shard_slice(y, i) for y in ops["y"]]}
+        mem_reads[f"dot{i}"] = {
+            "w": [shard_slice(w, i) for w in ops["w"]]}
+
+    def axpy_body(inputs):
+        return axpy_op(a, inputs["x"], inputs["y"], block_rows=br)
+
+    def dot_body_for(i):
+        def body(inputs):
+            return dot_partials_op(inputs[f"axpy{i}"], inputs["w"],
+                                   block_rows=br)[0, 0]
+        return body
+
+    def reduce_body(inputs):
+        return fold_partials([inputs[f"dot{i}"] for i in range(S)])
+
+    programs = {}
+    for i in range(S):
+        programs[f"axpy{i}"] = axpy_body
+        programs[f"dot{i}"] = dot_body_for(i)
+    programs["reduce"] = reduce_body
+
+    def reference():
+        return jnp.stack([axpydot_op(a, x, y, w, block_rows=br)
+                          for x, y, w in zip(ops["x"], ops["y"], ops["w"])])
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=sp["streams"],
+        mem_reads=mem_reads,
+        finalize=lambda sinks: jnp.stack(sinks["reduce"]),
+        reference=reference, atol=0.0)

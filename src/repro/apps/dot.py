@@ -1,0 +1,80 @@
+"""Dot (r = x·y) — memory-bound reduction over banked HBM.
+
+Same shard decomposition as :mod:`repro.apps.axpy`, but the shards emit
+scalar partials that a reduce sink folds **in shard order** with the
+kernels' shared ``fold_partials`` — the one canonical reduction order that
+makes the decomposed dataflow bit-identical to the monolithic Pallas
+``dot_op`` (floating-point addition does not commute in rounding).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import ResourceProfile, Task, TaskGraph
+from .axpy import ELEM_BYTES, N_FULL, VEC_BYTES, make_streams, shards_for
+
+
+def build_graph(ndev: int) -> TaskGraph:
+    S = shards_for(ndev)
+    g = TaskGraph(f"dot-s{S}x{ndev}")
+    shard_bytes = VEC_BYTES // S
+    for i in range(S):
+        g.add_task(Task(
+            f"part{i}",
+            ResourceProfile({"LUT": 14000, "DSP": 24, "BRAM": 8}),
+            hbm_bytes=2 * shard_bytes,
+            meta={"shard": i}))
+    g.add_task(Task("reduce",
+                    ResourceProfile({"LUT": 3000, "DSP": 8, "BRAM": 2})))
+    for i in range(S):
+        # A scalar partial per firing: the cut carries bytes, banks carry GB.
+        g.add_channel(f"part{i}", "reduce", width_bits=32,
+                      bytes_per_step=ELEM_BYTES)
+    return g
+
+
+def _spec(graph: TaskGraph, spec):
+    spec = dict(spec or {})
+    S = sum(1 for t in graph.tasks if t.startswith("part"))
+    rows = spec.get("rows", 16)
+    assert rows % S == 0, (rows, S)
+    return {"S": S, "rows": rows, "lanes": spec.get("lanes", 128),
+            "br": rows // S, "streams": spec.get("streams", 3),
+            "seed": spec.get("seed", 0)}
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    from ..exec.programs import ProgramBinding
+    from ..kernels import dot_op, dot_partials_op, fold_partials
+
+    sp = _spec(graph, spec)
+    S, br = sp["S"], sp["br"]
+    ops = make_streams(sp)
+
+    def shard_slice(arr, i):
+        return arr[i * br:(i + 1) * br]
+
+    mem_reads = {
+        f"part{i}": {"x": [shard_slice(x, i) for x in ops["x"]],
+                     "y": [shard_slice(y, i) for y in ops["y"]]}
+        for i in range(S)}
+
+    def shard_body(inputs):
+        return dot_partials_op(inputs["x"], inputs["y"],
+                               block_rows=br)[0, 0]
+
+    def reduce_body(inputs):
+        return fold_partials([inputs[f"part{i}"] for i in range(S)])
+
+    programs = {f"part{i}": shard_body for i in range(S)}
+    programs["reduce"] = reduce_body
+
+    def reference():
+        return jnp.stack([dot_op(x, y, block_rows=br)
+                          for x, y in zip(ops["x"], ops["y"])])
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=sp["streams"],
+        mem_reads=mem_reads,
+        finalize=lambda sinks: jnp.stack(sinks["reduce"]),
+        reference=reference, atol=0.0)

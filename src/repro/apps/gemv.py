@@ -1,0 +1,87 @@
+"""Gemv (z = A·x) — the level-2 memory-bound workload.
+
+Row-block sharding: each shard task streams its block of A rows out of its
+own HBM bank while re-reading the (much smaller) dense x vector — the
+classic HBM-FPGA matrix-vector pattern where A's streaming bandwidth is
+the whole game.  Each firing processes a fresh (A, x) pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ResourceProfile, Task, TaskGraph
+from .axpy import ELEM_BYTES, N_FULL, shards_for
+
+# Modeled (full-scale) operand: 2^13 × 2^13 float32 matrix (256 MB).
+M_FULL = 1 << 13
+MAT_BYTES = M_FULL * M_FULL * ELEM_BYTES
+ROW_BYTES = M_FULL * ELEM_BYTES
+
+
+def build_graph(ndev: int) -> TaskGraph:
+    S = shards_for(ndev)
+    g = TaskGraph(f"gemv-s{S}x{ndev}")
+    shard_bytes = MAT_BYTES // S
+    for i in range(S):
+        g.add_task(Task(
+            f"row{i}",
+            ResourceProfile({"LUT": 22000, "DSP": 32, "BRAM": 16}),
+            hbm_bytes=shard_bytes + ROW_BYTES,   # A row-block + x replica
+            meta={"shard": i}))
+    g.add_task(Task("collect",
+                    ResourceProfile({"LUT": 4000, "DSP": 0, "BRAM": 4})))
+    for i in range(S):
+        g.add_channel(f"row{i}", "collect", width_bits=512,
+                      bytes_per_step=M_FULL * ELEM_BYTES // S)
+    return g
+
+
+def _spec(graph: TaskGraph, spec):
+    spec = dict(spec or {})
+    S = sum(1 for t in graph.tasks if t.startswith("row"))
+    rows = spec.get("rows", 16)
+    assert rows % S == 0, (rows, S)
+    return {"S": S, "rows": rows, "lanes": spec.get("lanes", 128),
+            "br": rows // S, "streams": spec.get("streams", 3),
+            "seed": spec.get("seed", 0)}
+
+
+def bind_programs(graph: TaskGraph, spec=None):
+    from ..exec.programs import ProgramBinding
+    from ..kernels import gemv_op
+
+    sp = _spec(graph, spec)
+    S, br = sp["S"], sp["br"]
+    rng = jax.random.PRNGKey(sp["seed"])
+    As = [jax.random.normal(jax.random.fold_in(rng, t),
+                            (sp["rows"], sp["lanes"]), jnp.float32)
+          for t in range(sp["streams"])]
+    xs = [jax.random.normal(jax.random.fold_in(rng, 1000 + t),
+                            (1, sp["lanes"]), jnp.float32)
+          for t in range(sp["streams"])]
+
+    mem_reads = {
+        f"row{i}": {"A": [A[i * br:(i + 1) * br] for A in As],
+                    "x": list(xs)}               # dense x re-read per shard
+        for i in range(S)}
+
+    def shard_body(inputs):
+        return gemv_op(inputs["A"], inputs["x"], block_rows=br)
+
+    def collect_body(inputs):
+        return jnp.concatenate([inputs[f"row{i}"] for i in range(S)],
+                               axis=0)
+
+    programs = {f"row{i}": shard_body for i in range(S)}
+    programs["collect"] = collect_body
+
+    def reference():
+        return jnp.stack([gemv_op(A, x, block_rows=br)
+                          for A, x in zip(As, xs)])
+
+    return ProgramBinding(
+        graph=graph, programs=programs, iterations=sp["streams"],
+        mem_reads=mem_reads,
+        finalize=lambda sinks: jnp.stack(sinks["collect"]),
+        reference=reference, atol=0.0)

@@ -57,6 +57,13 @@ class CompiledDesign:
     # Typed loosely so the compiler stays importable without repro.net.
     fabric: Optional[object] = None          # net.fabric.Fabric
     congestion: Optional[object] = None      # net.congestion.CongestionReport
+    # HBM bank model (repro.mem) the design was compiled against, the
+    # memory_feedback pass's projected per-bank demand, and the task→bank
+    # map it settled on.  None when compiled without a bank model (reads
+    # are ideal: every response ready the sweep it is issued).
+    mem_config: Optional[object] = None      # mem.banks.MemConfig
+    mem_contention: Optional[object] = None  # mem.contention.MemContentionReport
+    bank_map: Optional[Mapping[str, int]] = None
 
     # -- execution ---------------------------------------------------------
     def execute(self, inputs: Optional[Mapping[str, object]] = None, **kw):
@@ -132,6 +139,18 @@ class CompiledDesign:
             out["net"] = self.fabric.describe()
             if self.congestion is not None:
                 out["net"]["projected"] = self.congestion.summary()
+        if self.mem_config is not None:
+            cfg = self.mem_config
+            out["mem"] = {
+                "banks_per_device": cfg.banks_per_device,
+                "bank_bandwidth_Bps": cfg.bank_bandwidth_Bps,
+                "credits": cfg.credits,
+                "burst_bytes": cfg.burst_bytes,
+            }
+            if self.bank_map:
+                out["mem"]["bank_map"] = dict(self.bank_map)
+            if self.mem_contention is not None:
+                out["mem"]["projected"] = self.mem_contention.summary()
         return out
 
     def to_json(self, indent: Optional[int] = None) -> str:

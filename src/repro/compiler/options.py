@@ -15,6 +15,7 @@ from typing import TYPE_CHECKING, Mapping, Optional, Tuple, Union
 from ..core.floorplan import SlotGrid
 
 if TYPE_CHECKING:                     # avoid a runtime compiler<->net cycle
+    from ..mem.banks import MemConfig
     from ..net.fabric import Fabric
 
 
@@ -90,6 +91,21 @@ class CompileOptions:
     # §4.3: congestion control outranks load balance — hot repartitions
     # drop the balance band so traffic may consolidate off hot links.
     congestion_relax_balance: bool = True
+
+    # -- memory_feedback pass (repro.mem) ---------------------------------
+    # HBM bank model.  When set, compile() appends the memory_feedback
+    # pass after partition (and after congestion_feedback when a fabric is
+    # also set), the artifact carries the MemConfig + task→bank map, and
+    # design.execute() steps banks per sweep.
+    mem: Optional["MemConfig"] = None
+    # A bank whose projected utilization — offered load, like the link
+    # threshold above — passes this triggers a bank re-map and, failing
+    # that, a membound repartition.
+    mem_threshold: float = 0.75
+    # None = the MemConfig's sweep-time base (shared with the transport).
+    mem_step_time_s: Optional[float] = None
+    # Allow the membound repartition stage (bank re-map alone is always on).
+    mem_repartition: bool = True
 
     # -- schedule pass (cost model, §5) -----------------------------------
     # None = device fmax (or 1.0 when the device has no fabric clock);

@@ -60,6 +60,11 @@ class CompileState:
     # typed loosely to keep repro.compiler importable without repro.net).
     fabric: Optional[object] = None          # net.fabric.Fabric
     congestion: Optional[object] = None      # net.congestion.CongestionReport
+    # HBM bank model + projected per-bank demand (memory_feedback pass;
+    # loosely typed for the same import-cycle reason as fabric above).
+    mem_config: Optional[object] = None      # mem.banks.MemConfig
+    mem_contention: Optional[object] = None  # mem.contention.MemContentionReport
+    bank_map: Optional[Dict[str, int]] = None
     # Per-compile() memo of solver inputs (pair-cost matrix, per-task area
     # vectors, topological order) so the passes stop recomputing them.
     _memo: Dict[object, object] = dataclasses.field(default_factory=dict,
@@ -324,6 +329,23 @@ def run_congestion_feedback(state: CompileState):
     try:
         return congestion_feedback_pass(state)
     except RuntimeError as e:               # fabric/cluster mismatch etc.
+        raise CompileError(str(e)) from e
+
+
+# ---------------------------------------------------------------------------
+# memory_feedback — HBM bank-bandwidth demand charged into the partition
+# (repro.mem).  Same deferred-import shape as congestion_feedback.
+# ---------------------------------------------------------------------------
+
+@register_pass("memory_feedback")
+def run_memory_feedback(state: CompileState):
+    if state.partition is None:
+        raise CompileError(
+            "memory_feedback pass requires a partition pass first")
+    from ..mem.calibrate import memory_feedback_pass
+    try:
+        return memory_feedback_pass(state)
+    except RuntimeError as e:
         raise CompileError(str(e)) from e
 
 

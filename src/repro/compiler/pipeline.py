@@ -74,7 +74,11 @@ class CompilerPipeline:
             pass_records=tuple(records),
             fabric=state.fabric if state.fabric is not None
             else options.fabric,
-            congestion=state.congestion)
+            congestion=state.congestion,
+            mem_config=state.mem_config if state.mem_config is not None
+            else options.mem,
+            mem_contention=state.mem_contention,
+            bank_map=dict(state.bank_map) if state.bank_map else None)
 
 
 def compile(graph: TaskGraph, cluster: Cluster,  # noqa: A001 - deliberate
@@ -89,8 +93,16 @@ def compile(graph: TaskGraph, cluster: Cluster,  # noqa: A001 - deliberate
     options = options or CompileOptions()
     if options.passes is not None:
         passes = options.passes
-    elif options.fabric is not None:
-        passes = FABRIC_PASSES
     else:
-        passes = DEFAULT_PASSES
+        passes = FABRIC_PASSES if options.fabric is not None \
+            else DEFAULT_PASSES
+        if options.mem is not None:
+            # Bank demand is charged right after the (possibly
+            # congestion-repartitioned) assignment settles, and before
+            # floorplan/schedule consume it.
+            passes = list(passes)
+            anchor = ("congestion_feedback" if "congestion_feedback"
+                      in passes else "partition")
+            passes.insert(passes.index(anchor) + 1, "memory_feedback")
+            passes = tuple(passes)
     return CompilerPipeline(passes).run(graph, cluster, options)

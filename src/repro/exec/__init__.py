@@ -26,11 +26,11 @@ from .executor import (DeadlockError, ExecutionResult, StarvationError,
                        execute)
 from .programs import (BINDER_REGISTRY, ProgramBinding, RoutedOutput,
                        SOURCE_KEY, bind_programs, register_binder)
-from .report import ChannelTrace, ExecutionReport
+from .report import ChannelTrace, ExecutionReport, MemChannelTrace
 
 __all__ = [
     "BINDER_REGISTRY", "ChannelStats", "ChannelTrace", "DeadlockError",
-    "ExecutionReport", "ExecutionResult", "FifoChannel", "ProgramBinding",
-    "RoutedOutput", "SOURCE_KEY", "StarvationError", "bind_programs",
-    "execute", "register_binder", "token_bytes",
+    "ExecutionReport", "ExecutionResult", "FifoChannel", "MemChannelTrace",
+    "ProgramBinding", "RoutedOutput", "SOURCE_KEY", "StarvationError",
+    "bind_programs", "execute", "register_binder", "token_bytes",
 ]

@@ -28,6 +28,18 @@ hops, and a token only becomes visible after its own message delivers.
 (the pre-fabric behaviour, bit-identical numerics).  After the last firing
 the network is drained so the per-link byte accounting is complete.
 
+HBM banks (``repro.mem``): when the binding declares ``mem_reads`` streams
+and the design (or the caller) supplies a
+:class:`~repro.mem.banks.MemConfig`, each stream becomes an
+:class:`~repro.mem.channels.AsyncMemChannel` against a
+:class:`~repro.mem.banks.MemorySystem` stepped once per sweep — the
+``async_mmap`` split request/response contract: requests are pumped ahead
+of consumption up to the credit bound, banks serve bursts fairly across
+the channels mapped to them, and a task additionally waits on its head
+memory response before firing (tallied in ``mem_waits``).  ``mem=None``
+forces the ideal memory path: every response ready the sweep it is issued,
+bit-identical numerics (payloads come from the binding either way).
+
 Detection:
 
 * **Hard deadlock** — a sweep fires nothing, and no queued token will ever
@@ -121,7 +133,8 @@ def execute(design: CompiledDesign,
             starve_limit: int = 3,
             check_starvation: bool = True,
             fabric: Any = FROM_DESIGN,
-            net_config=None) -> ExecutionResult:
+            net_config=None,
+            mem: Any = FROM_DESIGN) -> ExecutionResult:
     """Run ``design`` as a multi-device dataflow program.
 
     ``binding`` defaults to the app hook resolved from the graph's name
@@ -132,6 +145,9 @@ def execute(design: CompiledDesign,
     pass ``fabric=None`` to force the ideal transfer path or a
     :class:`~repro.net.fabric.Fabric` to override.  ``net_config`` is the
     :class:`~repro.net.transport.NetConfig` for the fabric transport.
+    ``mem`` defaults to the design's bank model (``CompileOptions.mem``);
+    pass ``mem=None`` to force the ideal memory path or a
+    :class:`~repro.mem.banks.MemConfig` to override.
     """
     if design.partition is None:
         raise ValueError("execute() needs a partitioned design "
@@ -181,6 +197,34 @@ def execute(design: CompiledDesign,
              if not any(not fc.is_back for fc in out_chs[t])]
 
     T = binding.iterations
+
+    # Async memory channels (repro.mem) — one per declared mem_reads stream,
+    # placed on the task's logical device and its compiled (or default)
+    # bank.  memsys=None (mem=None, or a design compiled without a bank
+    # model) is the ideal path: same channels, immediate responses.
+    mem_config = design.mem_config if mem is FROM_DESIGN else mem
+    memsys = None
+    mem_channels: List[Any] = []
+    mem_chs: Dict[str, List[Any]] = {t: [] for t in graph.tasks}
+    if binding.mem_reads:
+        from ..mem.channels import AsyncMemChannel   # deferred: optional
+        bank_map = dict(design.bank_map or {})
+        if mem_config is not None:
+            from ..mem.banks import MemorySystem
+            from ..mem.contention import default_bank_map
+            memsys = MemorySystem(design.partition.num_devices(), mem_config)
+            if not bank_map:
+                bank_map = default_bank_map(graph, assign, mem_config)
+        for task in sorted(binding.mem_reads):
+            for stream in sorted(binding.mem_reads[task]):
+                mc = AsyncMemChannel(
+                    len(mem_channels), task, stream,
+                    binding.mem_reads[task][stream], T,
+                    device=assign[task], bank=bank_map.get(task, 0),
+                    memsys=memsys)
+                mem_channels.append(mc)
+                mem_chs[task].append(mc)
+
     order = list(reversed(graph.topo_order()))
     max_lat = max((fc.latency for fc in channels), default=1)
     if max_sweeps is None:
@@ -194,11 +238,17 @@ def execute(design: CompiledDesign,
             # per-iteration flit-hops (actual tokens may exceed the model).
             est = _estimate_flit_hops(channels, transport)
             max_sweeps += 256 + 64 * (T + 1) * max(1, est)
+        if memsys is not None:
+            # Banks serve >= 1 burst per sweep while queued, so the total
+            # burst demand bounds the extra memory-induced sweeps.
+            max_sweeps += 256 + 4 * sum(mc.total_bursts()
+                                        for mc in mem_channels)
 
     fired: Dict[str, int] = {t: 0 for t in graph.tasks}
     starve_events: Dict[str, int] = {}
     starve_detail: List[Dict[str, Any]] = []
     congestion_waits: Dict[str, int] = {}
+    mem_waits: Dict[str, int] = {}
     sink_outputs: Dict[str, List[Any]] = {t: [] for t in sinks}
     busy_s: Dict[int, float] = {}
     dev_fired: Dict[int, int] = {}
@@ -213,12 +263,21 @@ def execute(design: CompiledDesign,
             if fc.full:
                 why.append(f"output {task}->{fc.dst} full "
                            f"(depth {fc.capacity})")
+        for mc in mem_chs[task]:
+            if mc.stats.consumed < mc.count and not mc.response_ready(sweep):
+                why.append(f"memory {task}.{mc.stream} response pending "
+                           f"({mc.stats.consumed}/{mc.count} consumed, "
+                           f"{mc.outstanding} outstanding)")
         return why
 
     t_start = time.perf_counter()
     sweep, done = 0, False
     while sweep < max_sweeps:
         fired_this_sweep = 0
+        for mc in mem_channels:
+            # Issue reads ahead of consumption, up to the credit bound —
+            # the multiple-outstanding-transactions loop of async_mmap.
+            mc.pump(sweep)
         for v in order:
             if fired[v] >= T:
                 continue
@@ -259,10 +318,18 @@ def execute(design: CompiledDesign,
                                 f"pipeline_interconnect pass or raise "
                                 f"min_depth)")
                 continue
+            if mem_chs[v] and not all(mc.response_ready(sweep)
+                                      for mc in mem_chs[v]):
+                # The graph is ready but a memory response is still in the
+                # bank pipe — read_data.empty() on the async_mmap side.
+                mem_waits[v] = mem_waits.get(v, 0) + 1
+                continue
             token_in: Dict[str, Any] = {fc.src: fc.pop(sweep)
                                         for fc in in_chs[v]}
-            if not in_chs[v]:
+            if not in_chs[v] and v in binding.source_inputs:
                 token_in[SOURCE_KEY] = binding.source_inputs[v][fired[v]]
+            for mc in mem_chs[v]:
+                token_in[mc.stream] = mc.consume(sweep)
             dev = assign[v]
             t0 = time.perf_counter()
             out = binding.programs[v](token_in)
@@ -282,6 +349,9 @@ def execute(design: CompiledDesign,
         if transport is not None:
             for mid, ch_index in transport.step(sweep):
                 channels[ch_index].on_delivered(mid, sweep)
+        if memsys is not None:
+            for rid, ch_index in memsys.step(sweep):
+                mem_channels[ch_index].on_complete(rid, sweep)
         done = all(n >= T for n in fired.values())
         if done:
             break
@@ -291,8 +361,11 @@ def execute(design: CompiledDesign,
             # tasks — diagnose it.
             ripening = any(vis > sweep for fc in channels
                            for vis in fc.pending_visibility())
+            ripening = ripening or any(vis > sweep for mc in mem_channels
+                                       for vis in mc.pending_visibility())
             in_network = transport is not None and transport.active
-            if not ripening and not in_network:
+            in_memory = memsys is not None and memsys.active
+            if not ripening and not in_network and not in_memory:
                 lines = [f"  {t} ({fired[t]}/{T} firings): " +
                          ("; ".join(_blockers(t, sweep)) or "unknown")
                          for t in graph.tasks if fired[t] < T]
@@ -312,6 +385,12 @@ def execute(design: CompiledDesign,
         # the per-link byte conservation identities hold exactly.
         for mid, ch_index in transport.drain(sweep + 1):
             channels[ch_index].on_delivered(mid, sweep)
+    if memsys is not None and memsys.active:
+        # Every firing consumed its response, so the banks are normally dry
+        # here — drain defensively so Σ bank bytes == Σ channel bytes holds
+        # even if a program under-consumed.
+        for rid, ch_index in memsys.drain(sweep + 1):
+            mem_channels[ch_index].on_complete(rid, sweep)
 
     wall = time.perf_counter() - t_start
     report = build_report(
@@ -319,7 +398,8 @@ def execute(design: CompiledDesign,
         sweeps=sweep + 1, wall_time_s=wall, device_busy_s=busy_s,
         device_fired=dev_fired, starvation_events=starve_events,
         starvation_detail=starve_detail, transport=transport,
-        congestion_waits=congestion_waits)
+        congestion_waits=congestion_waits, memsys=memsys,
+        mem_channels=mem_channels, mem_waits=mem_waits)
     outputs = (binding.finalize(sink_outputs)
                if binding.finalize is not None else sink_outputs)
     return ExecutionResult(outputs=outputs, sink_outputs=sink_outputs,

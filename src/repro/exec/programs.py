@@ -14,7 +14,9 @@ Program calling convention
 
 * ``inputs`` maps each predecessor task name to the token popped from that
   channel; source tasks additionally receive the current stream item under
-  ``SOURCE_KEY``.
+  ``SOURCE_KEY``.  Tasks with ``mem_reads`` streams receive each consumed
+  memory response under its stream name (``async_mmap`` reads — see
+  :mod:`repro.mem.channels`).
 * Returning a plain value (dicts included — a dict is just a pytree token)
   broadcasts it onto every outgoing channel; returning a
   :class:`RoutedOutput` keyed by successor names routes a distinct token
@@ -71,12 +73,22 @@ class ProgramBinding:
     index in ``graph.channels`` (the dependency cycle's initial tokens —
     PageRank's rank vector).  ``finalize`` folds the per-firing outputs of
     the sink tasks into the value compared against ``reference()``.
+
+    ``mem_reads`` declares the ``async_mmap``-style memory streams:
+    ``task → stream name → per-firing payload tokens``.  The executor turns
+    each stream into an :class:`~repro.mem.channels.AsyncMemChannel` bound
+    to the task's device and bank; the program receives firing *i*'s token
+    under the stream name.  The payloads live here — the bank model only
+    schedules *when* each response arrives — so bank-modeled and ideal
+    executions are bit-identical by construction.
     """
 
     graph: TaskGraph
     programs: Mapping[str, ProgramFn]
     iterations: int
     source_inputs: Mapping[str, Sequence[Any]] = dataclasses.field(
+        default_factory=dict)
+    mem_reads: Mapping[str, Mapping[str, Sequence[Any]]] = dataclasses.field(
         default_factory=dict)
     prime: Mapping[int, Any] = dataclasses.field(default_factory=dict)
     finalize: Optional[Callable[[Dict[str, List[Any]]], Any]] = None
@@ -96,6 +108,27 @@ class ProgramBinding:
                 raise ValueError(
                     f"source {t!r}: {len(stream)} stream items < "
                     f"{self.iterations} iterations")
+        fed = {ch.dst for ch in self.graph.channels}
+        starved = [t for t in self.graph.tasks
+                   if t not in fed and t not in self.source_inputs
+                   and t not in self.mem_reads]
+        if starved:
+            raise ValueError(
+                f"task(s) {starved} have no in-channels, no source_inputs "
+                "stream, and no mem_reads stream — nothing feeds them")
+        for t, streams in self.mem_reads.items():
+            if t not in self.graph.tasks:
+                raise ValueError(f"mem_reads for unknown task {t!r}")
+            preds = {ch.src for ch in self.graph.channels if ch.dst == t}
+            for name, tokens in streams.items():
+                if name in preds or name == SOURCE_KEY:
+                    raise ValueError(
+                        f"memory stream {t}.{name} shadows an input key "
+                        f"(predecessors: {sorted(preds)})")
+                if len(tokens) < self.iterations:
+                    raise ValueError(
+                        f"memory stream {t}.{name}: {len(tokens)} tokens < "
+                        f"{self.iterations} iterations")
 
 
 def bind_programs(graph: TaskGraph, spec: Optional[Mapping[str, Any]] = None

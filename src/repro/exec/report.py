@@ -28,6 +28,18 @@ With a network fabric (``repro.net``), two more:
 The ``net`` block of :meth:`summary` carries the per-link
 :class:`~repro.net.congestion.CongestionReport` (utilization, queue highs,
 stalls) next to those identities.
+
+With an HBM bank model (``repro.mem``), two more:
+
+* ``mem_delivery_match`` — every memory stream issued exactly its firing
+  count of requests and consumed every response (requested bytes ==
+  delivered bytes per channel);
+* ``bank_conservation`` — per-bank served bytes sum exactly to the
+  memory-channel delivered bytes (Σ_bank bytes == Σ_channel bytes; no hop
+  multiplier — each request is served by exactly one bank).
+
+The ``mem`` block carries the measured per-bank
+:class:`~repro.mem.contention.MemContentionReport` next to those.
 """
 from __future__ import annotations
 
@@ -66,6 +78,27 @@ class ChannelTrace:
 
 
 @dataclasses.dataclass(frozen=True)
+class MemChannelTrace:
+    """One async memory stream's measured life (``repro.mem``)."""
+
+    task: str
+    stream: str
+    device: int
+    bank: int
+    count: int                     # firings = responses the task must consume
+    issued: int
+    consumed: int
+    requested_bytes: int
+    delivered_bytes: int
+    blocked_issues: int            # pump stalls on exhausted credits
+    max_outstanding: int
+    response_waits: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionReport:
     """Measured execution record for one ``execute()`` run."""
 
@@ -90,6 +123,11 @@ class ExecutionReport:
     congestion: Optional[Any] = None           # net.CongestionReport
     congestion_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
     measured_route_comm_cost: float = 0.0      # per-link Eq. 2 over the cut
+    # HBM bank model (None/empty on the ideal memory path).
+    mem_contention: Optional[Any] = None       # mem.MemContentionReport
+    mem_channels: List[MemChannelTrace] = dataclasses.field(
+        default_factory=list)
+    mem_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -108,6 +146,23 @@ class ExecutionReport:
     @property
     def used_fabric(self) -> bool:
         return self.congestion is not None
+
+    @property
+    def used_mem(self) -> bool:
+        return self.mem_contention is not None
+
+    @property
+    def mem_requested_bytes(self) -> int:
+        return sum(c.requested_bytes for c in self.mem_channels)
+
+    @property
+    def mem_delivered_bytes(self) -> int:
+        return sum(c.delivered_bytes for c in self.mem_channels)
+
+    @property
+    def mem_bank_bytes(self) -> float:
+        return (self.mem_contention.total_bytes
+                if self.mem_contention is not None else 0.0)
 
     @property
     def net_submitted_bytes(self) -> int:
@@ -144,6 +199,15 @@ class ExecutionReport:
             out["link_conservation"] = math.isclose(
                 self.net_link_bytes, float(self.net_hop_weighted_bytes),
                 rel_tol=0.0, abs_tol=0.0)
+        if self.mem_channels:
+            out["mem_delivery_match"] = all(
+                c.issued == c.consumed == c.count
+                and c.requested_bytes == c.delivered_bytes
+                for c in self.mem_channels)
+        if self.used_mem:
+            # Exact integer identity: each request is served by one bank.
+            out["bank_conservation"] = (
+                int(self.mem_bank_bytes) == self.mem_delivered_bytes)
         return out
 
     # -- reporting ----------------------------------------------------------
@@ -187,6 +251,15 @@ class ExecutionReport:
                 "congestion_waits": dict(self.congestion_waits),
                 **self.congestion.summary(),
             }
+        if self.mem_channels or self.used_mem:
+            out["mem"] = {
+                "requested_bytes": self.mem_requested_bytes,
+                "delivered_bytes": self.mem_delivered_bytes,
+                "bank_bytes": self.mem_bank_bytes,
+                "mem_waits": dict(self.mem_waits),
+                "channels": [c.to_json() for c in self.mem_channels],
+                **(self.mem_contention.summary() if self.used_mem else {}),
+            }
         return out
 
 
@@ -197,7 +270,10 @@ def build_report(*, design, channels: Sequence[FifoChannel],
                  starvation_events: Mapping[str, int],
                  starvation_detail: Sequence[Dict[str, Any]],
                  transport=None,
-                 congestion_waits: Optional[Mapping[str, int]] = None
+                 congestion_waits: Optional[Mapping[str, int]] = None,
+                 memsys=None,
+                 mem_channels: Sequence[Any] = (),
+                 mem_waits: Optional[Mapping[str, int]] = None
                  ) -> ExecutionReport:
     """Assemble the report from live channels + the design's analytics."""
     part, cluster = design.partition, design.cluster
@@ -241,6 +317,19 @@ def build_report(*, design, channels: Sequence[FifoChannel],
     if transport is not None:
         from ..net.congestion import measure   # deferred: optional layer
         congestion = measure(transport)
+    mem_contention = None
+    if memsys is not None:
+        from ..mem.contention import measure as _mem_measure
+        mem_contention = _mem_measure(memsys)
+    mem_traces = [MemChannelTrace(
+        task=mc.task, stream=mc.stream, device=mc.device, bank=mc.bank,
+        count=mc.count, issued=mc.stats.issued, consumed=mc.stats.consumed,
+        requested_bytes=mc.stats.requested_bytes,
+        delivered_bytes=mc.stats.delivered_bytes,
+        blocked_issues=mc.stats.blocked_issues,
+        max_outstanding=mc.stats.max_outstanding,
+        response_waits=mc.stats.response_waits)
+        for mc in mem_channels]
     sched = design.schedule
     return ExecutionReport(
         graph_name=design.graph.name,
@@ -261,4 +350,7 @@ def build_report(*, design, channels: Sequence[FifoChannel],
         schedule_comm_bytes=sched.comm_bytes if sched is not None else None,
         congestion=congestion,
         congestion_waits=dict(congestion_waits or {}),
-        measured_route_comm_cost=route_cost)
+        measured_route_comm_cost=route_cost,
+        mem_contention=mem_contention,
+        mem_channels=mem_traces,
+        mem_waits=dict(mem_waits or {}))

@@ -5,9 +5,12 @@ tiling), ops.py (jit'd public wrapper; interpret=True on CPU), and ref.py
 (pure-jnp oracle used by the allclose test sweeps).
 """
 from .flash_attention.ops import flash_attention_op
+from .hbm_blas.ops import (axpy_op, axpydot_op, dot_op, dot_partials_op,
+                           fold_partials, gemv_op)
 from .stencil_dilate.ops import dilate_op
 from .knn.ops import knn_op
 from .systolic_matmul.ops import conv_op, matmul_op
 
 __all__ = ["flash_attention_op", "dilate_op", "knn_op", "matmul_op",
-           "conv_op"]
+           "conv_op", "axpy_op", "axpydot_op", "dot_op", "dot_partials_op",
+           "fold_partials", "gemv_op"]

@@ -1,0 +1,13 @@
+"""Memory-bound BLAS level-1/2 Pallas kernels (Axpy, Dot, Gemv, AxpyDot).
+
+The four apps where HBM banks, not compute or links, saturate — the
+FpgaHbmForDaCe workload set referenced by the ROADMAP.  Each op's block
+decomposition deliberately matches the app graphs' shard decomposition
+(one grid step per shard) so the decomposed dataflow execution reproduces
+the kernel bit for bit, reduction order included (``fold_partials``).
+"""
+from .ops import (axpy_op, axpydot_op, dot_op, dot_partials_op,
+                  fold_partials, gemv_op)
+
+__all__ = ["axpy_op", "axpydot_op", "dot_op", "dot_partials_op",
+           "fold_partials", "gemv_op"]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernels for the memory-bound BLAS ops.
+
+Arrays are 2-D ``[rows, lanes]`` (vectors of length ``rows × lanes``) so
+the 8×128 VPU tiling gets contiguous sublanes; every kernel tiles rows
+into ``[block_rows, lanes]`` VMEM blocks.  These ops move far more bytes
+than they compute — on the FPGA side each grid step is one shard streaming
+out of its own HBM pseudo-channel, which is exactly how the app graphs
+decompose them (one task per block row-range).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+def axpy(a: jax.Array, x: jax.Array, y: jax.Array,
+         block_rows: int, interpret: bool = False) -> jax.Array:
+    """a*x + y.  x, y: [R, C]; a: scalar array; R % block_rows == 0."""
+    R, C = x.shape
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(a.reshape(1, 1), x, y)
+
+
+def _dot_partials_kernel(x_ref, y_ref, o_ref):
+    o_ref[0, 0] = jnp.sum(x_ref[...] * y_ref[...])
+
+
+def dot_partials(x: jax.Array, y: jax.Array,
+                 block_rows: int, interpret: bool = False) -> jax.Array:
+    """Per-block partial sums of x·y: [R, C] → [R // block_rows, 1].
+
+    One partial per grid step — the same per-shard partial the app graph's
+    shard tasks emit.  The caller folds them (``fold_partials``) in block
+    order, fixing the reduction order on both paths.
+    """
+    R, C = x.shape
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0, (R, block_rows)
+    nblk = R // block_rows
+    return pl.pallas_call(
+        _dot_partials_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, 1), x.dtype),
+        interpret=interpret,
+    )(x, y)
+
+
+def fold_partials(partials) -> jax.Array:
+    """Sequential left fold of per-shard partials, index order.
+
+    Shared by the kernel ops and the app graphs' reduce tasks: one
+    canonical reduction order makes decomposed == monolithic bit-tight.
+    Accepts a [nblk, 1] array or a list of scalar arrays.
+    """
+    if hasattr(partials, "shape"):
+        parts = [partials[i, 0] for i in range(partials.shape[0])]
+    else:
+        parts = list(partials)
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    return acc
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    # Row-wise multiply + lane reduction rather than jnp.dot: the dot
+    # lowering is not grid-stable (its accumulation shape depends on the
+    # whole pallas_call), and the app graphs need block == shard bit-wise.
+    o_ref[...] = jnp.sum(a_ref[...] * x_ref[...], axis=1, keepdims=True)
+
+
+def gemv(A: jax.Array, x: jax.Array,
+         block_rows: int, interpret: bool = False) -> jax.Array:
+    """A @ x with row-block tiling.  A: [M, N]; x: [1, N] → [M, 1]."""
+    M, N = A.shape
+    block_rows = min(block_rows, M)
+    assert M % block_rows == 0, (M, block_rows)
+    grid = (M // block_rows,)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, N), lambda i: (i, 0)),
+            pl.BlockSpec((1, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), A.dtype),
+        interpret=interpret,
+    )(A, x)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the memory-bound BLAS ops (allclose sweeps)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def axpy_ref(a, x, y):
+    return a * x + y
+
+
+def dot_ref(x, y):
+    return jnp.sum(x * y)
+
+
+def gemv_ref(A, x):
+    """A: [M, N]; x: [1, N] → [M, 1] (kernel-shaped operands)."""
+    return A @ x.T
+
+
+def axpydot_ref(a, x, y, w):
+    return dot_ref(axpy_ref(a, x, y), w)

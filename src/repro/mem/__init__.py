@@ -1,0 +1,51 @@
+"""repro.mem — the HBM bank model (the "HBM" in distributed HBM-FPGAs).
+
+Sits one layer below :mod:`repro.net`, same shape: banks instead of links,
+bursts instead of flits, and TAPA's ``async_mmap`` split request/response
+channels instead of streaming FIFOs.
+
+* :mod:`~repro.mem.banks` models each device's HBM as independent
+  pseudo-channels: per-bank bandwidth budgets per sweep, fair burst
+  arbitration across the memory channels mapped to one bank, exact byte
+  accounting (Σ bank bytes == Σ channel bytes once drained);
+* :mod:`~repro.mem.channels` exposes banks to tasks as
+  :class:`AsyncMemChannel` — requests pumped ahead of consumption up to a
+  credit bound, responses consumed in issue order out of a bounded reorder
+  window (``issue_read_addr`` / ``receive_read_resp``, SNIPPETS.md §1);
+* :mod:`~repro.mem.contention` tracks per-bank utilization into a
+  :class:`MemContentionReport` (measured from a
+  :class:`~repro.mem.banks.MemorySystem`, or projected analytically from
+  ``Task.hbm_bytes`` + a partition assignment and task→bank map);
+* :mod:`~repro.mem.calibrate` feeds the projection back into the compiler:
+  the registered ``memory_feedback`` pass re-maps task→bank assignments
+  (LPT) and, failing that, repartitions with bank bandwidth as an Eq. 1
+  capacity — tagging ``method: "...-membound"``.
+
+Quickstart (compile with banks → execute → per-bank report)::
+
+    from repro.compiler import CompileOptions, compile
+    from repro.mem import MemConfig
+
+    design = compile(graph, cluster,
+                     CompileOptions(balance_kind="LUT", mem=MemConfig()))
+    result = design.execute()            # reads now contend for banks
+    result.report.mem_contention.summary()   # measured per-bank usage
+    design.mem_contention.summary()          # projected (compiler side)
+
+``python -m repro.mem.smoke`` is the CI entry point (axpy on four
+host-emulated devices; asserts bank-path ≡ ideal-path bit identity and
+writes the per-bank utilization JSON artifact).
+"""
+from .banks import BankCounters, MemConfig, MemorySystem
+from .calibrate import (MEM_KIND, membound_pair_partition,
+                        memory_feedback_pass, rebalance_bank_map)
+from .channels import AsyncMemChannel, MemChannelStats
+from .contention import (BankUsage, MemContentionReport, default_bank_map,
+                         measure, project)
+
+__all__ = [
+    "AsyncMemChannel", "BankCounters", "BankUsage", "MEM_KIND",
+    "MemChannelStats", "MemConfig", "MemContentionReport", "MemorySystem",
+    "default_bank_map", "measure", "membound_pair_partition",
+    "memory_feedback_pass", "project", "rebalance_bank_map",
+]

@@ -29,7 +29,8 @@ def _compile(app: str, ndev: int):
     return tapa_compile(graph, fpga_ring_cluster(ndev), _OPTS)
 
 
-@pytest.mark.parametrize("ndev", [2, 4])
+@pytest.mark.parametrize(
+    "ndev", [2, pytest.param(4, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("app", ["stencil", "pagerank", "knn", "cnn"])
 def test_numerics_parity(app, ndev):
     design = _compile(app, ndev)

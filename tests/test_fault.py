@@ -1,0 +1,140 @@
+"""runtime.fault — failure injection, restart supervision, stragglers.
+
+Direct unit coverage for the three fault-tolerance primitives: the
+deterministic :class:`FailureInjector` (fires each scheduled step exactly
+once), the :func:`run_with_restarts` supervisor (restart counting, success
+after k failures, exhaustion), and the :class:`StragglerMonitor` EWMA
+detector driven by a scripted clock so its flagging is deterministic.
+"""
+import pytest
+
+from repro.runtime import fault
+from repro.runtime.fault import (FailureInjector, StragglerMonitor,
+                                 run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_each_scheduled_step_once():
+    inj = FailureInjector(fail_at_steps=[2, 5])
+    fired = []
+    for step in range(8):
+        try:
+            inj.check(step)
+        except FailureInjector.Injected:
+            fired.append(step)
+    assert fired == [2, 5]
+    # A restarted run re-traverses the same steps: no double fire.
+    for step in range(8):
+        inj.check(step)
+    assert inj.fired == {2, 5}
+
+
+def test_injector_default_is_inert():
+    inj = FailureInjector()
+    for step in range(100):
+        inj.check(step)
+    assert not inj.fired
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts
+# ---------------------------------------------------------------------------
+
+def _flaky_run(inj, total_steps=10):
+    """A trainer stand-in: resumes from the step after the last failure
+    (the checkpoint contract) and returns the final step reached."""
+    attempts = []
+
+    def make_and_run(attempt):
+        attempts.append(attempt)
+        start = max(inj.fired, default=-1) + 1
+        for step in range(start, total_steps):
+            inj.check(step)
+        return total_steps - 1
+
+    return make_and_run, attempts
+
+
+def test_restarts_count_and_recover():
+    inj = FailureInjector(fail_at_steps=[1, 4, 7])
+    make_and_run, attempts = _flaky_run(inj)
+    assert run_with_restarts(make_and_run, max_restarts=5) == 9
+    # One initial attempt + exactly one restart per injected failure.
+    assert attempts == [0, 1, 2, 3]
+
+
+def test_restarts_exhaust_with_diagnostic():
+    inj = FailureInjector(fail_at_steps=[0, 1, 2, 3, 4])
+    make_and_run, attempts = _flaky_run(inj)
+    with pytest.raises(RuntimeError, match="exhausted 2 restarts"):
+        run_with_restarts(make_and_run, max_restarts=2)
+    assert attempts == [0, 1, 2]         # initial + the two allowed restarts
+
+    # The same failure schedule succeeds when the budget covers it.
+    inj2 = FailureInjector(fail_at_steps=[0, 1, 2, 3, 4])
+    make_and_run2, _ = _flaky_run(inj2)
+    assert run_with_restarts(make_and_run2, max_restarts=5) == 9
+
+
+def test_supervisor_only_catches_injected_faults():
+    def broken(attempt):
+        raise ValueError("a real bug, not a fault")
+    with pytest.raises(ValueError, match="real bug"):
+        run_with_restarts(broken, max_restarts=3)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor (scripted clock → deterministic flags)
+# ---------------------------------------------------------------------------
+
+def _scripted_clock(monkeypatch, durations):
+    """perf_counter values yielding the given per-step durations for the
+    start/stop call pairs the monitor makes."""
+    ticks = [0.0]
+    for d in durations:
+        ticks.append(ticks[-1] + d)       # value at stop()
+        ticks.append(ticks[-1])           # value at next start()
+    it = iter(ticks)
+    monkeypatch.setattr(fault.time, "perf_counter", lambda: next(it))
+
+
+def test_straggler_flags_only_the_slow_step(monkeypatch):
+    # Steady 1.0 s steps, one 3.0 s straggler: 3.0 > 2.5 × ewma(≈1.0).
+    durations = [1.0, 1.0, 1.0, 3.0, 1.0]
+    _scripted_clock(monkeypatch, durations)
+    mon = StragglerMonitor(alpha=0.1, threshold=2.5)
+    slow = []
+    for step, _ in enumerate(durations):
+        mon.start()
+        if mon.stop(step):
+            slow.append(step)
+    assert slow == [3]
+    assert mon.flagged == [3]
+
+
+def test_straggler_first_step_never_flags(monkeypatch):
+    # No EWMA baseline yet: even a huge first step cannot be a straggler.
+    _scripted_clock(monkeypatch, [100.0, 1.0])
+    mon = StragglerMonitor()
+    mon.start()
+    assert not mon.stop(0)
+    # ...and it poisons the baseline high: the next fast step is also fine.
+    mon.start()
+    assert not mon.stop(1)
+    assert mon.flagged == []
+
+
+def test_straggler_ewma_adapts(monkeypatch):
+    """A permanent slowdown is flagged once, then absorbed into the mean —
+    the monitor tracks drift instead of flagging forever."""
+    durations = [1.0] * 3 + [4.0] * 30
+    _scripted_clock(monkeypatch, durations)
+    mon = StragglerMonitor(alpha=0.5, threshold=2.5)
+    for step, _ in enumerate(durations):
+        mon.start()
+        mon.stop(step)
+    assert mon.flagged == [3]            # the jump itself
+    assert mon.ewma == pytest.approx(4.0, rel=1e-3)  # ...then adapted

@@ -167,6 +167,7 @@ _NET_OPTS = CompileOptions(
             "pipeline_interconnect", "schedule"))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("app", ["stencil", "pagerank", "knn", "cnn"])
 def test_ring4_apps_bit_identical_through_fabric(app):
     cluster = fpga_ring_cluster(4)
