@@ -150,6 +150,76 @@ def section57_multinode():
     return "§5.7: multi-node scaling", rows, checks
 
 
+def section57_testbed():
+    """Paper §5.7's physical testbed: two nodes × 4 U55Cs in one 8-ring,
+    the two node-boundary cables running the 10 Gbps inter-node link
+    (50 µs wire latency) while intra-node hops stay on 100 G QSFP28.
+
+    The structural rows are exact (link lowering, λ ratio, latency-aware
+    hop cost).  The scaling row is cross-checked by *executing* a compiled
+    stencil through the two-node fabric: numerics must be bit-identical to
+    the ideal path, per-link bytes must conserve, every node-boundary hop
+    must cost exactly ``1 + ceil(50 µs / sweep)`` sweeps, and the run must
+    take more sweeps than the identical design on an all-100G single-node
+    ring — the same degradation direction §5.7 reports for stencil."""
+    import jax.numpy as jnp
+
+    from repro.core import INTER_NODE_10G
+    from repro.exec import bind_programs, execute
+    from repro.net import NetConfig, build_fabric, cluster_fabric
+
+    two_node = fpga_ring_cluster(8, devices_per_node=4)
+    fabric = cluster_fabric(two_node)
+    slow = sorted((l.src, l.dst) for l in fabric.links
+                  if l.protocol is INTER_NODE_10G)
+    cfg = NetConfig(hop_latency=True)
+    intra_hop = cfg.hop_delay(ETHERNET_100G.latency_s)
+    inter_hop = cfg.hop_delay(INTER_NODE_10G.latency_s)
+    ratio = ETHERNET_100G.bandwidth_Bps / INTER_NODE_10G.bandwidth_Bps
+
+    graph = stencil.build_graph(8)
+    opts = CompileOptions(
+        balance_kind="LUT", balance_tol=0.8, fabric=fabric,
+        passes=("normalize_units", "partition", "congestion_feedback",
+                "pipeline_interconnect", "schedule"))
+    design = tapa_compile(graph, two_node, opts)
+    via_net = execute(design, bind_programs(graph), net_config=cfg)
+    ideal = execute(design, bind_programs(graph), fabric=None)
+    rep = via_net.report
+    single = execute(design, bind_programs(graph),
+                     fabric=build_fabric(two_node.topology, ETHERNET_100G),
+                     net_config=cfg)
+
+    rows = [("quantity", "model", "paper/testbed")]
+    rows.append(("ring links (directed)", len(fabric.links), "8-FPGA ring"))
+    rows.append(("node-boundary cables", len(slow) // 2, "2 (4+4 split)"))
+    rows.append(("intra/inter bandwidth ratio", f"{ratio:.0f}x",
+                 "100G vs 10G"))
+    rows.append(("boundary hop cost", f"{inter_hop} sweeps",
+                 f"intra {intra_hop} sweeps"))
+    rows.append(("stencil-x8 sweeps (two-node)", rep.sweeps,
+                 f"single-node {single.report.sweeps}"))
+    checks = [
+        ("boundary links are exactly the 4+4 seam",
+         slow == [(0, 7), (3, 4), (4, 3), (7, 0)], f"{slow}"),
+        ("boundary hop costs 1 + ceil(50us/sweep) sweeps",
+         inter_hop == 1 + int(np.ceil(
+             INTER_NODE_10G.latency_s / cfg.sweep_time_s)),
+         f"{inter_hop}"),
+        ("fabric numerics bit-identical to ideal path",
+         bool(jnp.all(via_net.outputs == ideal.outputs)), ""),
+        ("per-link bytes == hop-weighted cut traffic",
+         rep.net_link_bytes == rep.net_hop_weighted_bytes,
+         f"{rep.net_link_bytes}"),
+        ("traffic agreement (cut set + comm cost)",
+         all(rep.agreement().values()), f"{rep.agreement()}"),
+        ("two-node run slower than all-100G run (scaling row direction)",
+         rep.sweeps > single.report.sweeps,
+         f"{rep.sweeps} vs {single.report.sweeps}"),
+    ]
+    return "§5.7: two-node testbed (4+4 ring over 10G)", rows, checks
+
+
 def section56_overheads():
     """Time OUR ILP floorplanner on paper-sized graphs (§5.6: 1.9–37.8 s
     for 15–493 modules with Gurobi).  Per-level times come straight from

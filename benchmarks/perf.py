@@ -37,6 +37,17 @@ accounting must conserve bytes exactly (Σ per-bank bytes == Σ
 memory-channel delivered bytes); and the hot-bank demo (every reader
 pinned to bank 0) must trigger the memory_feedback re-map and reduce max
 projected bank utilization by ≥ 10×.  All asserted in both modes.
+
+Multi-tenant serving (the ``serve`` section, schema v5): two independently
+compiled designs co-run as tenants over ONE shared 4-ring fabric with 2:1
+weighted-fair flow arbitration — each tenant's outputs must be
+bit-identical to its solo run and Σ per-tenant link bytes must equal total
+link bytes exactly; a mid-flight device kill drains the victim and
+re-admits it on its survivors without perturbing the peer; the capacity
+measured from the co-run calibrates a virtual-time load sweep (p50/p99
+latency and goodput vs offered load) and the 2×-oversubscription isolation
+invariant (victim goodput ≥ 90% of fair share).  All asserted in both
+modes.
 """
 from __future__ import annotations
 
@@ -374,6 +385,111 @@ def bench_memory_feedback() -> Dict[str, object]:
     return d
 
 
+def bench_serve(smoke: bool) -> Dict[str, object]:
+    """Multi-tenant serving over one shared fabric (schema v5 ``serve``):
+    a real flit-level co-run asserts bit-identity + exact conservation and
+    measures the delivered capacity; a device-kill run asserts the fault
+    drain leaves the peer untouched; the measured capacity then drives the
+    fluid-model load sweep and the isolation invariant."""
+    from repro.apps import APPS
+    from repro.compiler import compile as tapa_compile
+    from repro.core import fpga_ring_cluster
+    from repro.exec import bind_programs, execute
+    from repro.net import cluster_fabric
+    from repro.net.transport import NetConfig
+    from repro.tenants import (SLO, DeviceKill, Tenant, TenantLoad,
+                               TenantServer, TrafficConfig, bit_identical,
+                               isolation_check, load_sweep)
+
+    stencil = _app_module("stencil")
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    net_config = NetConfig()
+    specs = {"a": {"seed": 0}, "b": {"seed": 7}}
+    graphs = {n: stencil.build_graph(2) for n in specs}
+    designs = {n: tapa_compile(graphs[n], fpga_ring_cluster(2),
+                               _options(stencil, 2)) for n in specs}
+    solo = {n: execute(designs[n], bind_programs(graphs[n], specs[n]),
+                       fabric=None) for n in specs}
+
+    def tenants():
+        # Placed so both routes cross link 0->1 (a: 0->1->2, b: 0->1).
+        return [
+            Tenant("a", designs["a"], device_map=[0, 2],
+                   slo=SLO(1e-3, weight=2.0), inputs=specs["a"]),
+            Tenant("b", designs["b"], device_map=[0, 1],
+                   slo=SLO(1e-3, weight=1.0), inputs=specs["b"]),
+        ]
+
+    server = TenantServer(fabric, tenants(), net_config=net_config)
+    out = server.run()
+    for n in specs:
+        rec = out.record(n)
+        if rec.status != "done":
+            raise AssertionError(f"tenant {n} did not finish: {rec.status}")
+        if not bit_identical(rec.result.outputs, solo[n].outputs):
+            raise AssertionError(
+                f"tenant {n}: co-run outputs diverged from its solo run")
+    conservation = out.conservation      # asserts exact per-link equality
+    if not any(len(c.flow_bytes) >= 2 for c in server.transport.counters):
+        raise AssertionError("placement bug: no link carried both tenants")
+
+    kill_sweep = 2
+    fserver = TenantServer(fabric, tenants(), net_config=net_config)
+    fout = fserver.run(faults=[DeviceKill(device=2, sweep=kill_sweep)])
+    if fout.record("a+recovered").status != "done":
+        raise AssertionError("killed tenant never finished after re-admit")
+    peer = fout.record("b")
+    if peer.status != "done" or \
+            not bit_identical(peer.result.outputs, solo["b"].outputs):
+        raise AssertionError(
+            "fault drain perturbed the surviving tenant's outputs")
+
+    duration_s = out.sweeps * net_config.sweep_time_s
+    capacity = conservation["total_link_bytes"] / duration_s
+
+    # Load sweep at the measured capacity: 2:1 weights, sizes scaled so a
+    # factor-1.0 offered load is ~n_requests whatever capacity came out.
+    horizon_s = 4.0
+    n_requests = 2_000 if smoke else 10_000
+    mean_size = capacity * horizon_s / n_requests
+    weights = {"a": 2.0, "b": 1.0}
+    wsum = sum(weights.values())
+    loads = {
+        i: TenantLoad(
+            name=n,
+            slo=SLO(target_latency_s=8 * mean_size * wsum / (capacity * w),
+                    weight=w, deadline_factor=4.0, max_inflight=8),
+            traffic=TrafficConfig(
+                rate_rps=capacity * w / (wsum * mean_size),
+                mean_size=mean_size, duration_s=horizon_s, tail_shape=2.5))
+        for i, (n, w) in enumerate(weights.items())
+    }
+    factors = [0.5, 1.0, 2.0] if smoke else [0.25, 0.5, 1.0, 2.0, 4.0]
+    rows = load_sweep(loads, capacity, factors, seed=0)
+
+    iso = isolation_check(capacity)
+    if not iso["isolated"]:
+        raise AssertionError(
+            f"isolation invariant failed: victim held "
+            f"{iso['victim_share_frac']:.3f} of its fair share (< 0.9)")
+
+    return {
+        "topology": "ring", "ndev_shared": 4, "app": "stencil",
+        "tenants": {n: {"weight": w,
+                        "link_bytes":
+                            conservation["per_tenant_link_bytes"][n]}
+                    for n, w in weights.items()},
+        "co_run": {"sweeps": out.sweeps, "bit_identical": True,
+                   "capacity_Bps": capacity,
+                   "total_link_bytes": conservation["total_link_bytes"]},
+        "fault": {"kill_sweep": kill_sweep, "killed": "a",
+                  "recovered_as": "a+recovered", "sweeps": fout.sweeps,
+                  "peer_bit_identical": True},
+        "load_sweep": rows,
+        "isolation": iso,
+    }
+
+
 def bench_kl_refine(nv: int = 256, ndev: int = 8,
                     avg_degree: int = 8) -> Dict[str, object]:
     """Synthetic-graph micro-benchmark of the PR 3 kl_refine rewrite."""
@@ -507,6 +623,19 @@ def main() -> int:
           f"{hotbank['max_utilization_after']:.3f} "
           f"({hotbank['reduction']}x, method {hotbank['method']})")
 
+    serve = bench_serve(args.smoke)
+    co, iso = serve["co_run"], serve["isolation"]
+    print(f"[serve 2-tenant shared ring ] co-run {co['sweeps']} sweeps "
+          f"bit-identical, capacity {co['capacity_Bps']:.3e} B/s, "
+          f"victim share {iso['victim_share_frac']:.3f} "
+          f"(kill+readmit in {serve['fault']['sweeps']} sweeps)")
+    for row in serve["load_sweep"]:
+        t = row["tenants"]
+        print(f"[serve load x{row['load_factor']:<4g}] " + "  ".join(
+            f"{n}: p99 {s['p99_latency_s']:.2e}s "
+            f"goodput {s['goodput_Bps']:.2e}B/s"
+            for n, s in t.items()))
+
     kl = bench_kl_refine()
     print(f"[kl_refine {kl['nodes']}n/{kl['ndev']}d] ref {kl['ref_s']}s "
           f"vec {kl['vec_s']}s -> {kl['speedup']}x")
@@ -524,7 +653,7 @@ def main() -> int:
                 f"model build speedup {build['speedup']} below 1.5x floor")
 
     out = {
-        "schema": "bench-compile/v4",
+        "schema": "bench-compile/v5",
         "created_unix": time.time(),
         "mode": "smoke" if args.smoke else "full",
         "configs": records,
@@ -542,6 +671,9 @@ def main() -> int:
             "bank_exec": mem_records,
             "memory_feedback": hotbank,
         },
+        # Multi-tenant serving (repro.tenants): shared-fabric co-run,
+        # fault drain, load sweep, isolation invariant.
+        "serve": serve,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)
@@ -550,7 +682,9 @@ def main() -> int:
           f"legacy; {len(exec_records)} executed designs agree with the "
           f"comm_cost accounting; {len(net_records)} fabric-routed designs "
           f"conserve per-link bytes; {len(mem_records)} bank-modeled apps "
-          f"bit-identical to their Pallas references; wrote {args.out}")
+          f"bit-identical to their Pallas references; 2-tenant shared-"
+          f"fabric serve isolated (victim share "
+          f"{iso['victim_share_frac']:.3f}); wrote {args.out}")
     return 0
 
 

@@ -131,6 +131,7 @@ def main() -> int:
         paper_tables.table9_hierarchy(),
         paper_tables.table10_protocols(),
         paper_tables.section57_multinode(),
+        paper_tables.section57_testbed(),
         paper_tables.section56_overheads(),
         compiler_artifact(),
     ]

@@ -22,15 +22,16 @@ single-device interpreter still executes every design — logical placement
 keeps driving the traffic accounting.
 """
 from .channels import ChannelStats, FifoChannel, token_bytes
-from .executor import (DeadlockError, ExecutionResult, StarvationError,
-                       execute)
+from .executor import (DeadlockError, ExecutionResult, ExecutionState,
+                       StarvationError, execute)
 from .programs import (BINDER_REGISTRY, ProgramBinding, RoutedOutput,
                        SOURCE_KEY, bind_programs, register_binder)
 from .report import ChannelTrace, ExecutionReport, MemChannelTrace
 
 __all__ = [
     "BINDER_REGISTRY", "ChannelStats", "ChannelTrace", "DeadlockError",
-    "ExecutionReport", "ExecutionResult", "FifoChannel", "MemChannelTrace",
-    "ProgramBinding", "RoutedOutput", "SOURCE_KEY", "StarvationError",
-    "bind_programs", "execute", "register_binder", "token_bytes",
+    "ExecutionReport", "ExecutionResult", "ExecutionState", "FifoChannel",
+    "MemChannelTrace", "ProgramBinding", "RoutedOutput", "SOURCE_KEY",
+    "StarvationError", "bind_programs", "execute", "register_binder",
+    "token_bytes",
 ]

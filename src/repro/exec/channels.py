@@ -100,11 +100,20 @@ class FifoChannel:
     device ids, which drive the traffic accounting even when fewer physical
     devices exist than the partition assumed.  ``transport`` routes
     inter-device pushes over the network fabric (None → ideal transfer).
+    ``net_src_dev``/``net_dst_dev`` are the *fabric* device ids the
+    crossing is routed between — they differ from the logical ids when a
+    tenant's design is placed onto a shared fabric through a device map
+    (:mod:`repro.tenants`); they default to the logical ids, and when the
+    map collapses a crossing onto one fabric device the network is skipped
+    (there is no route — the transfer is ideal, the Eq. 2 accounting stays
+    logical).
     """
 
     def __init__(self, index: int, channel: Channel, src_dev: int,
                  dst_dev: int, *, capacity: Optional[int] = None,
-                 latency: int = 1, dst_device=None, transport=None):
+                 latency: int = 1, dst_device=None, transport=None,
+                 net_src_dev: Optional[int] = None,
+                 net_dst_dev: Optional[int] = None):
         if capacity is None:
             capacity = channel.depth
         if capacity < 1:
@@ -121,7 +130,10 @@ class FifoChannel:
         self.is_back = bool(channel.meta.get("back"))
         self.inter_device = src_dev != dst_dev
         self.dst_device = dst_device
-        self.transport = transport if self.inter_device else None
+        self.net_src_dev = src_dev if net_src_dev is None else net_src_dev
+        self.net_dst_dev = dst_dev if net_dst_dev is None else net_dst_dev
+        self.transport = (transport if self.inter_device
+                          and self.net_src_dev != self.net_dst_dev else None)
         # Double buffering (§4.6): depth >= 2 lets the transfer overlap the
         # producer; a depth-1 FIFO must move the data when the consumer asks.
         self.eager_transfer = self.inter_device and self.capacity >= 2
@@ -176,8 +188,8 @@ class FifoChannel:
             nbytes = token_bytes(token)
             self.stats.measured_bytes += nbytes
             if self.transport is not None:
-                mid = self.transport.submit(self.index, self.src_dev,
-                                            self.dst_dev, nbytes, sweep)
+                mid = self.transport.submit(self.index, self.net_src_dev,
+                                            self.net_dst_dev, nbytes, sweep)
                 self.stats.net_bytes += nbytes
                 entry = _Entry(None, token, mid, nbytes)
                 self._pending[mid] = entry

@@ -40,6 +40,21 @@ memory response before firing (tallied in ``mem_waits``).  ``mem=None``
 forces the ideal memory path: every response ready the sweep it is issued,
 bit-identical numerics (payloads come from the binding either way).
 
+Multi-tenant sharing (``repro.tenants``): the per-design machinery lives
+in :class:`ExecutionState` — a resumable state machine that fires one
+sweep at a time (:meth:`ExecutionState.advance`) and receives network and
+memory completions from outside (:meth:`ExecutionState.net_deliver` /
+:meth:`ExecutionState.mem_deliver`).  ``execute()`` wraps one state in the
+classic solo loop and *owns* its transport and memory system; a tenant
+server instead passes every state a flow-scoped **view** of one shared
+transport/memory system (``transport=`` / ``memsys=``) plus a
+``device_map`` placing the design's logical devices onto the shared
+fabric's physical ids, then steps the shared substrate itself and demuxes
+completions back to the states.  Sharing never touches the numerics — a
+channel's payload rides outside the flit clock — so a tenant's outputs
+are bit-identical to its solo run by construction, which the tenant layer
+asserts rather than assumes.
+
 Detection:
 
 * **Hard deadlock** — a sweep fires nothing, and no queued token will ever
@@ -92,18 +107,6 @@ class ExecutionResult:
     report: ExecutionReport
 
 
-def _physical_devices(num_logical: int, devices=None) -> List[Any]:
-    """Map logical partition devices onto the physical jax devices.
-
-    CI runs host-platform emulation (``--xla_force_host_platform_device_count``)
-    so logical == physical; a bare interpreter with one CPU device still
-    executes every design correctly — logical placement keeps driving the
-    traffic accounting, physical arrays just share the one device.
-    """
-    phys = list(devices) if devices is not None else list(jax.devices())
-    return [phys[d % len(phys)] for d in range(max(1, num_logical))]
-
-
 def _block(token: Any) -> None:
     for leaf in jax.tree_util.tree_leaves(token):
         if hasattr(leaf, "block_until_ready"):
@@ -116,13 +119,408 @@ def _estimate_flit_hops(channels: Sequence[FifoChannel], transport) -> int:
     caller pads generously)."""
     total = 0
     for fc in channels:
-        if not fc.inter_device:
+        if fc.transport is None:
             continue
         gch = fc.graph_channel
         nbytes = max(gch.bytes_per_step or 0.0, gch.width_bits / 8.0, 1.0)
         total += (transport.config.flits_for(int(nbytes))
-                  * len(transport.fabric.route(fc.src_dev, fc.dst_dev)))
+                  * len(transport.fabric.route(fc.net_src_dev,
+                                               fc.net_dst_dev)))
     return total
+
+
+class ExecutionState:
+    """One design's live execution — fire-a-sweep-at-a-time state machine.
+
+    Owns everything per-design (FIFO channels, memory streams, firing
+    counts, starvation/congestion tallies) and nothing shared: the network
+    transport and memory system are either created here (solo mode — the
+    classic ``execute()`` path, signalled by ``transport``/``memsys`` left
+    at None) or handed in by a multi-tenant server as flow-scoped views
+    over one shared substrate.  In shared mode the server steps the
+    substrate and routes completions back through :meth:`net_deliver` /
+    :meth:`mem_deliver`; this state never steps or drains what it does not
+    own (``owns_transport`` / ``owns_memsys``).
+
+    ``device_map[logical] -> fabric id`` places the design's partition
+    onto the (possibly larger, shared) physical fabric; it defaults to the
+    identity, and it also selects the backing jax device so two tenants
+    mapped apart land on distinct devices.  Logical ids keep driving the
+    Eq. 2 accounting either way — the map only changes what the *network*
+    sees.
+    """
+
+    def __init__(self, design: CompiledDesign,
+                 binding: Optional[ProgramBinding] = None, *,
+                 inputs: Optional[Mapping[str, Any]] = None,
+                 devices: Optional[Sequence[Any]] = None,
+                 max_sweeps: Optional[int] = None,
+                 starve_limit: int = 3,
+                 check_starvation: bool = True,
+                 fabric: Any = FROM_DESIGN,
+                 net_config=None,
+                 mem: Any = FROM_DESIGN,
+                 transport: Any = None,
+                 memsys: Any = None,
+                 device_map: Optional[Sequence[int]] = None):
+        if design.partition is None:
+            raise ValueError("execute() needs a partitioned design "
+                             "(run the partition pass)")
+        if binding is None:
+            binding = bind_programs(design.graph, inputs)
+        self.design = design
+        self.binding = binding
+        graph, assign = design.graph, design.partition.assignment
+        self.graph, self.assign = graph, assign
+        rep = design.pipeline_report
+        ndev = design.partition.num_devices()
+
+        if device_map is None:
+            self.device_map = list(range(max(1, ndev)))
+        else:
+            self.device_map = [int(d) for d in device_map]
+            if len(self.device_map) < ndev:
+                raise ValueError(
+                    f"device_map covers {len(self.device_map)} logical "
+                    f"devices but the partition uses {ndev}")
+        # CI runs host-platform emulation
+        # (``--xla_force_host_platform_device_count``) so logical ==
+        # physical; a bare interpreter with one CPU device still executes
+        # every design correctly — logical placement keeps driving the
+        # traffic accounting, physical arrays just share the one device.
+        pool = list(devices) if devices is not None else list(jax.devices())
+        jax_dev = [pool[self.device_map[d] % len(pool)]
+                   for d in range(max(1, ndev))]
+
+        self.owns_transport = transport is None
+        if transport is None:
+            if fabric is FROM_DESIGN:
+                fabric = design.fabric
+            if fabric is not None:
+                from ..net.transport import FabricTransport  # optional layer
+                if fabric.num_devices != design.cluster.num_devices:
+                    raise ValueError(
+                        f"fabric spans {fabric.num_devices} devices but the "
+                        f"cluster has {design.cluster.num_devices}")
+                transport = FabricTransport(fabric, net_config)
+        else:
+            nfab = transport.fabric.num_devices
+            bad = [d for d in self.device_map[:max(1, ndev)] if d >= nfab]
+            if bad:
+                raise ValueError(f"device_map targets fabric devices {bad} "
+                                 f"outside the shared fabric's 0..{nfab - 1}")
+        self.transport = transport
+
+        self.channels: List[FifoChannel] = []
+        for i, ch in enumerate(graph.channels):
+            latency = 1 + (rep.added_latency.get(i, 0)
+                           if rep is not None else 0)
+            self.channels.append(FifoChannel(
+                i, ch, assign[ch.src], assign[ch.dst], latency=latency,
+                dst_device=jax_dev[assign[ch.dst] % len(jax_dev)],
+                transport=transport,
+                net_src_dev=self.device_map[assign[ch.src]],
+                net_dst_dev=self.device_map[assign[ch.dst]]))
+        for i, token in binding.prime.items():
+            self.channels[i].prime(token)
+
+        self.in_chs: Dict[str, List[FifoChannel]] = {t: [] for t in
+                                                     graph.tasks}
+        self.out_chs: Dict[str, List[FifoChannel]] = {t: [] for t in
+                                                      graph.tasks}
+        for fc in self.channels:
+            if any(prev.src == fc.src for prev in self.in_chs[fc.dst]):
+                # token_in is keyed by predecessor name — a second channel
+                # from the same producer would silently overwrite the
+                # first's token.
+                raise ValueError(
+                    f"parallel channels {fc.src}->{fc.dst}: the executor "
+                    "delivers one token per predecessor; merge the payloads "
+                    "into one channel (tokens are arbitrary pytrees)")
+            self.in_chs[fc.dst].append(fc)
+            self.out_chs[fc.src].append(fc)
+        # Sinks: no forward (non-back) out-channel — their firing values
+        # are the pipeline's results (back edges recirculate, they don't
+        # leave the pipe).
+        self.sinks = [t for t in graph.tasks
+                      if not any(not fc.is_back for fc in self.out_chs[t])]
+
+        self.iterations = T = binding.iterations
+
+        # Async memory channels (repro.mem) — one per declared mem_reads
+        # stream, placed on the task's logical device and its compiled (or
+        # default) bank.  memsys None + mem_config None is the ideal path:
+        # same channels, immediate responses.
+        mem_config = design.mem_config if mem is FROM_DESIGN else mem
+        self.owns_memsys = memsys is None
+        self.mem_channels: List[Any] = []
+        self.mem_chs: Dict[str, List[Any]] = {t: [] for t in graph.tasks}
+        if binding.mem_reads:
+            from ..mem.channels import AsyncMemChannel   # optional layer
+            bank_map = dict(design.bank_map or {})
+            if memsys is None and mem_config is not None:
+                from ..mem.banks import MemorySystem
+                memsys = MemorySystem(ndev, mem_config)
+            if memsys is not None and not bank_map:
+                from ..mem.contention import default_bank_map
+                bank_map = default_bank_map(graph, assign, memsys.config)
+            for task in sorted(binding.mem_reads):
+                for stream in sorted(binding.mem_reads[task]):
+                    mc = AsyncMemChannel(
+                        len(self.mem_channels), task, stream,
+                        binding.mem_reads[task][stream], T,
+                        device=assign[task], bank=bank_map.get(task, 0),
+                        memsys=memsys)
+                    self.mem_channels.append(mc)
+                    self.mem_chs[task].append(mc)
+        self.memsys = memsys
+
+        self.order = list(reversed(graph.topo_order()))
+        max_lat = max((fc.latency for fc in self.channels), default=1)
+        if max_sweeps is None:
+            # Pipeline depth is bounded by tasks × max latency; each of the
+            # T firings advances at least one task per sweep barring
+            # throttling.
+            max_sweeps = 64 + 4 * (T + len(graph.tasks)) * (1 + max_lat)
+            if transport is not None:
+                # The network serializes flits over shared links; transport
+                # progress is guaranteed (>= 1 flit-hop per sweep while
+                # active), so pad by a generous multiple of the modeled
+                # per-iteration flit-hops (actual tokens may exceed the
+                # model).
+                est = _estimate_flit_hops(self.channels, transport)
+                max_sweeps += 256 + 64 * (T + 1) * max(1, est)
+            if memsys is not None:
+                # Banks serve >= 1 burst per sweep while queued, so the
+                # total burst demand bounds the extra memory-induced sweeps.
+                max_sweeps += 256 + 4 * sum(mc.total_bursts()
+                                            for mc in self.mem_channels)
+        self.max_sweeps = max_sweeps
+        self.starve_limit = starve_limit
+        self.check_starvation = check_starvation
+
+        self.fired: Dict[str, int] = {t: 0 for t in graph.tasks}
+        self.starve_events: Dict[str, int] = {}
+        self.starve_detail: List[Dict[str, Any]] = []
+        self.congestion_waits: Dict[str, int] = {}
+        self.mem_waits: Dict[str, int] = {}
+        self.sink_outputs: Dict[str, List[Any]] = {t: [] for t in self.sinks}
+        self.busy_s: Dict[int, float] = {}
+        self.dev_fired: Dict[int, int] = {}
+        self.sweeps_done = 0
+
+    # -- progress queries ----------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return all(n >= self.iterations for n in self.fired.values())
+
+    @property
+    def total_firings(self) -> int:
+        return self.iterations * len(self.graph.tasks)
+
+    @property
+    def firings(self) -> int:
+        return sum(self.fired.values())
+
+    def has_pending(self, sweep: int) -> bool:
+        """Progress is still coming without any task firing: a token is
+        ripening in a FIFO, a response in the reorder window, or traffic
+        is in the network / bank pipe (flow-scoped in shared mode)."""
+        if any(vis > sweep for fc in self.channels
+               for vis in fc.pending_visibility()):
+            return True
+        if any(vis > sweep for mc in self.mem_channels
+               for vis in mc.pending_visibility()):
+            return True
+        if self.transport is not None and self.transport.active:
+            return True
+        return self.memsys is not None and self.memsys.active
+
+    def blockers(self, task: str, sweep: int) -> List[str]:
+        why = []
+        for fc in self.in_chs[task]:
+            if not fc.head_visible(sweep):
+                why.append(f"input {fc.src}->{task} empty "
+                           f"(occupancy {fc.occupancy}/{fc.capacity})")
+        for fc in self.out_chs[task]:
+            if fc.full:
+                why.append(f"output {task}->{fc.dst} full "
+                           f"(depth {fc.capacity})")
+        for mc in self.mem_chs[task]:
+            if mc.stats.consumed < mc.count and not mc.response_ready(sweep):
+                why.append(f"memory {task}.{mc.stream} response pending "
+                           f"({mc.stats.consumed}/{mc.count} consumed, "
+                           f"{mc.outstanding} outstanding)")
+        return why
+
+    def deadlock(self, sweep: int) -> DeadlockError:
+        lines = [f"  {t} ({self.fired[t]}/{self.iterations} firings): " +
+                 ("; ".join(self.blockers(t, sweep)) or "unknown")
+                 for t in self.graph.tasks
+                 if self.fired[t] < self.iterations]
+        return DeadlockError(
+            "dataflow deadlock at sweep %d — no task can fire and "
+            "no token is in flight:\n%s" % (sweep, "\n".join(lines)))
+
+    # -- completion demux (shared mode: called by the tenant server) ---------
+    def net_deliver(self, channel_index: int, mid: int, sweep: int) -> None:
+        self.channels[channel_index].on_delivered(mid, sweep)
+
+    def mem_deliver(self, chan_index: int, rid: int, sweep: int) -> None:
+        self.mem_channels[chan_index].on_complete(rid, sweep)
+
+    # -- one sweep of task firing --------------------------------------------
+    def advance(self, sweep: int) -> int:
+        """Fire every ready task once (reverse topo order); returns the
+        firing count.  Does NOT step the transport / memory system — the
+        owner of those does (``run()`` solo, the tenant server shared)."""
+        binding, T = self.binding, self.iterations
+        fired_this_sweep = 0
+        for mc in self.mem_channels:
+            # Issue reads ahead of consumption, up to the credit bound —
+            # the multiple-outstanding-transactions loop of async_mmap.
+            mc.pump(sweep)
+        for v in self.order:
+            if self.fired[v] >= T:
+                continue
+            in_chs, out_chs = self.in_chs[v], self.out_chs[v]
+            ready = all(fc.head_visible(sweep) for fc in in_chs)
+            space = all(not fc.full for fc in out_chs)
+            if not (ready and space):
+                if in_chs:
+                    empty = [fc for fc in in_chs
+                             if not fc.head_visible(sweep)]
+                    at_cap = [fc for fc in in_chs if fc.full]
+                    if empty and at_cap:
+                        if any(fc.in_flight > 0 for fc in empty):
+                            # Data is coming — the wait is network
+                            # congestion, not a §4.6 depth imbalance.
+                            self.congestion_waits[v] = \
+                                self.congestion_waits.get(v, 0) + 1
+                            continue
+                        # A bounded FIFO may transiently saturate while the
+                        # pipeline fills (bounded by the paths' hop-count
+                        # difference) — only persistence past starve_limit
+                        # is the unbalanced-cut-set signature.
+                        self.starve_events[v] = \
+                            self.starve_events.get(v, 0) + 1
+                        self.starve_detail.append({
+                            "sweep": sweep, "task": v,
+                            "starved_input": f"{empty[0].src}->{v}",
+                            "full_input": f"{at_cap[0].src}->{v}",
+                            "full_depth": at_cap[0].capacity})
+                        if (self.check_starvation
+                                and self.starve_events[v]
+                                >= self.starve_limit):
+                            d = self.starve_detail[-1]
+                            raise StarvationError(
+                                f"join {v!r} starved "
+                                f"{self.starve_events[v]}x on "
+                                f"{d['starved_input']} while sibling FIFO "
+                                f"{d['full_input']} sat full at depth "
+                                f"{d['full_depth']}: unbalanced cut-set — "
+                                f"§4.6 balancing would deepen "
+                                f"{d['full_input']} (run the "
+                                f"pipeline_interconnect pass or raise "
+                                f"min_depth)")
+                continue
+            if self.mem_chs[v] and not all(mc.response_ready(sweep)
+                                           for mc in self.mem_chs[v]):
+                # The graph is ready but a memory response is still in the
+                # bank pipe — read_data.empty() on the async_mmap side.
+                self.mem_waits[v] = self.mem_waits.get(v, 0) + 1
+                continue
+            token_in: Dict[str, Any] = {fc.src: fc.pop(sweep)
+                                        for fc in in_chs}
+            if not in_chs and v in binding.source_inputs:
+                token_in[SOURCE_KEY] = binding.source_inputs[v][self.fired[v]]
+            for mc in self.mem_chs[v]:
+                token_in[mc.stream] = mc.consume(sweep)
+            dev = self.assign[v]
+            t0 = time.perf_counter()
+            out = binding.programs[v](token_in)
+            _block(out)
+            self.busy_s[dev] = (self.busy_s.get(dev, 0.0)
+                                + time.perf_counter() - t0)
+            self.dev_fired[dev] = self.dev_fired.get(dev, 0) + 1
+            if isinstance(out, RoutedOutput):
+                for fc in out_chs:
+                    fc.push(out[fc.dst], sweep)
+            else:
+                for fc in out_chs:
+                    fc.push(out, sweep)
+            if v in self.sinks:
+                self.sink_outputs[v].append(out)
+            self.fired[v] += 1
+            fired_this_sweep += 1
+        self.sweeps_done = max(self.sweeps_done, sweep + 1)
+        return fired_this_sweep
+
+    # -- wrap-up -------------------------------------------------------------
+    def build_result(self, sweeps: int, wall_time_s: float
+                     ) -> ExecutionResult:
+        """Fold the state into the measured report + finalized outputs."""
+        report = build_report(
+            design=self.design, channels=self.channels,
+            iterations=self.iterations, sweeps=sweeps,
+            wall_time_s=wall_time_s, device_busy_s=self.busy_s,
+            device_fired=self.dev_fired,
+            starvation_events=self.starve_events,
+            starvation_detail=self.starve_detail, transport=self.transport,
+            congestion_waits=self.congestion_waits, memsys=self.memsys,
+            mem_channels=self.mem_channels, mem_waits=self.mem_waits)
+        outputs = (self.binding.finalize(self.sink_outputs)
+                   if self.binding.finalize is not None
+                   else self.sink_outputs)
+        return ExecutionResult(outputs=outputs,
+                               sink_outputs=self.sink_outputs,
+                               report=report)
+
+    # -- the classic solo loop -----------------------------------------------
+    def run(self) -> ExecutionResult:
+        """Drive this state to completion, stepping the owned substrate."""
+        transport, memsys = self.transport, self.memsys
+        t_start = time.perf_counter()
+        sweep, done = 0, False
+        while sweep < self.max_sweeps:
+            fired_this_sweep = self.advance(sweep)
+            if transport is not None and self.owns_transport:
+                for mid, ch_index in transport.step(sweep):
+                    self.net_deliver(ch_index, mid, sweep)
+            if memsys is not None and self.owns_memsys:
+                for rid, ch_index in memsys.step(sweep):
+                    self.mem_deliver(ch_index, rid, sweep)
+            done = self.done
+            if done:
+                break
+            if fired_this_sweep == 0 and not self.has_pending(sweep):
+                # Tokens still ripening — or transiting the fabric — are
+                # progress; a silent sweep without any is a cycle of
+                # blocked tasks — diagnose it.
+                raise self.deadlock(sweep)
+            sweep += 1
+        if not done:
+            raise DeadlockError(
+                f"executor exceeded max_sweeps={self.max_sweeps} "
+                f"(fired {self.firings} of {self.total_firings} "
+                f"firings) — throughput collapse; check FIFO depths"
+                + (" and fabric link budgets" if transport is not None
+                   else ""))
+
+        if transport is not None and self.owns_transport and transport.active:
+            # Run the network dry (e.g. final back-edge tokens nobody pops)
+            # so the per-link byte conservation identities hold exactly.
+            for mid, ch_index in transport.drain(sweep + 1):
+                self.net_deliver(ch_index, mid, sweep)
+        if memsys is not None and self.owns_memsys and memsys.active:
+            # Every firing consumed its response, so the banks are normally
+            # dry here — drain defensively so Σ bank bytes == Σ channel
+            # bytes holds even if a program under-consumed.
+            for rid, ch_index in memsys.drain(sweep + 1):
+                self.mem_deliver(ch_index, rid, sweep)
+
+        wall = time.perf_counter() - t_start
+        return self.build_result(sweep + 1, wall)
 
 
 def execute(design: CompiledDesign,
@@ -149,258 +547,8 @@ def execute(design: CompiledDesign,
     pass ``mem=None`` to force the ideal memory path or a
     :class:`~repro.mem.banks.MemConfig` to override.
     """
-    if design.partition is None:
-        raise ValueError("execute() needs a partitioned design "
-                         "(run the partition pass)")
-    if binding is None:
-        binding = bind_programs(design.graph, inputs)
-    graph, assign = design.graph, design.partition.assignment
-    rep = design.pipeline_report
-    phys = _physical_devices(design.partition.num_devices(), devices)
-
-    if fabric is FROM_DESIGN:
-        fabric = design.fabric
-    transport = None
-    if fabric is not None:
-        from ..net.transport import FabricTransport   # deferred: optional
-        if fabric.num_devices != design.cluster.num_devices:
-            raise ValueError(
-                f"fabric spans {fabric.num_devices} devices but the "
-                f"cluster has {design.cluster.num_devices}")
-        transport = FabricTransport(fabric, net_config)
-
-    channels: List[FifoChannel] = []
-    for i, ch in enumerate(graph.channels):
-        latency = 1 + (rep.added_latency.get(i, 0) if rep is not None else 0)
-        channels.append(FifoChannel(
-            i, ch, assign[ch.src], assign[ch.dst], latency=latency,
-            dst_device=phys[assign[ch.dst] % len(phys)],
-            transport=transport))
-    for i, token in binding.prime.items():
-        channels[i].prime(token)
-
-    in_chs: Dict[str, List[FifoChannel]] = {t: [] for t in graph.tasks}
-    out_chs: Dict[str, List[FifoChannel]] = {t: [] for t in graph.tasks}
-    for fc in channels:
-        if any(prev.src == fc.src for prev in in_chs[fc.dst]):
-            # token_in is keyed by predecessor name — a second channel from
-            # the same producer would silently overwrite the first's token.
-            raise ValueError(
-                f"parallel channels {fc.src}->{fc.dst}: the executor "
-                "delivers one token per predecessor; merge the payloads "
-                "into one channel (tokens are arbitrary pytrees)")
-        in_chs[fc.dst].append(fc)
-        out_chs[fc.src].append(fc)
-    # Sinks: no forward (non-back) out-channel — their firing values are the
-    # pipeline's results (back edges recirculate, they don't leave the pipe).
-    sinks = [t for t in graph.tasks
-             if not any(not fc.is_back for fc in out_chs[t])]
-
-    T = binding.iterations
-
-    # Async memory channels (repro.mem) — one per declared mem_reads stream,
-    # placed on the task's logical device and its compiled (or default)
-    # bank.  memsys=None (mem=None, or a design compiled without a bank
-    # model) is the ideal path: same channels, immediate responses.
-    mem_config = design.mem_config if mem is FROM_DESIGN else mem
-    memsys = None
-    mem_channels: List[Any] = []
-    mem_chs: Dict[str, List[Any]] = {t: [] for t in graph.tasks}
-    if binding.mem_reads:
-        from ..mem.channels import AsyncMemChannel   # deferred: optional
-        bank_map = dict(design.bank_map or {})
-        if mem_config is not None:
-            from ..mem.banks import MemorySystem
-            from ..mem.contention import default_bank_map
-            memsys = MemorySystem(design.partition.num_devices(), mem_config)
-            if not bank_map:
-                bank_map = default_bank_map(graph, assign, mem_config)
-        for task in sorted(binding.mem_reads):
-            for stream in sorted(binding.mem_reads[task]):
-                mc = AsyncMemChannel(
-                    len(mem_channels), task, stream,
-                    binding.mem_reads[task][stream], T,
-                    device=assign[task], bank=bank_map.get(task, 0),
-                    memsys=memsys)
-                mem_channels.append(mc)
-                mem_chs[task].append(mc)
-
-    order = list(reversed(graph.topo_order()))
-    max_lat = max((fc.latency for fc in channels), default=1)
-    if max_sweeps is None:
-        # Pipeline depth is bounded by tasks × max latency; each of the T
-        # firings advances at least one task per sweep barring throttling.
-        max_sweeps = 64 + 4 * (T + len(graph.tasks)) * (1 + max_lat)
-        if transport is not None:
-            # The network serializes flits over shared links; transport
-            # progress is guaranteed (>= 1 flit-hop per sweep while
-            # active), so pad by a generous multiple of the modeled
-            # per-iteration flit-hops (actual tokens may exceed the model).
-            est = _estimate_flit_hops(channels, transport)
-            max_sweeps += 256 + 64 * (T + 1) * max(1, est)
-        if memsys is not None:
-            # Banks serve >= 1 burst per sweep while queued, so the total
-            # burst demand bounds the extra memory-induced sweeps.
-            max_sweeps += 256 + 4 * sum(mc.total_bursts()
-                                        for mc in mem_channels)
-
-    fired: Dict[str, int] = {t: 0 for t in graph.tasks}
-    starve_events: Dict[str, int] = {}
-    starve_detail: List[Dict[str, Any]] = []
-    congestion_waits: Dict[str, int] = {}
-    mem_waits: Dict[str, int] = {}
-    sink_outputs: Dict[str, List[Any]] = {t: [] for t in sinks}
-    busy_s: Dict[int, float] = {}
-    dev_fired: Dict[int, int] = {}
-
-    def _blockers(task: str, sweep: int) -> List[str]:
-        why = []
-        for fc in in_chs[task]:
-            if not fc.head_visible(sweep):
-                why.append(f"input {fc.src}->{task} empty "
-                           f"(occupancy {fc.occupancy}/{fc.capacity})")
-        for fc in out_chs[task]:
-            if fc.full:
-                why.append(f"output {task}->{fc.dst} full "
-                           f"(depth {fc.capacity})")
-        for mc in mem_chs[task]:
-            if mc.stats.consumed < mc.count and not mc.response_ready(sweep):
-                why.append(f"memory {task}.{mc.stream} response pending "
-                           f"({mc.stats.consumed}/{mc.count} consumed, "
-                           f"{mc.outstanding} outstanding)")
-        return why
-
-    t_start = time.perf_counter()
-    sweep, done = 0, False
-    while sweep < max_sweeps:
-        fired_this_sweep = 0
-        for mc in mem_channels:
-            # Issue reads ahead of consumption, up to the credit bound —
-            # the multiple-outstanding-transactions loop of async_mmap.
-            mc.pump(sweep)
-        for v in order:
-            if fired[v] >= T:
-                continue
-            ready = all(fc.head_visible(sweep) for fc in in_chs[v])
-            space = all(not fc.full for fc in out_chs[v])
-            if not (ready and space):
-                if in_chs[v]:
-                    empty = [fc for fc in in_chs[v]
-                             if not fc.head_visible(sweep)]
-                    at_cap = [fc for fc in in_chs[v] if fc.full]
-                    if empty and at_cap:
-                        if any(fc.in_flight > 0 for fc in empty):
-                            # Data is coming — the wait is network
-                            # congestion, not a §4.6 depth imbalance.
-                            congestion_waits[v] = \
-                                congestion_waits.get(v, 0) + 1
-                            continue
-                        # A bounded FIFO may transiently saturate while the
-                        # pipeline fills (bounded by the paths' hop-count
-                        # difference) — only persistence past starve_limit
-                        # is the unbalanced-cut-set signature.
-                        starve_events[v] = starve_events.get(v, 0) + 1
-                        starve_detail.append({
-                            "sweep": sweep, "task": v,
-                            "starved_input": f"{empty[0].src}->{v}",
-                            "full_input": f"{at_cap[0].src}->{v}",
-                            "full_depth": at_cap[0].capacity})
-                        if (check_starvation
-                                and starve_events[v] >= starve_limit):
-                            d = starve_detail[-1]
-                            raise StarvationError(
-                                f"join {v!r} starved {starve_events[v]}x on "
-                                f"{d['starved_input']} while sibling FIFO "
-                                f"{d['full_input']} sat full at depth "
-                                f"{d['full_depth']}: unbalanced cut-set — "
-                                f"§4.6 balancing would deepen "
-                                f"{d['full_input']} (run the "
-                                f"pipeline_interconnect pass or raise "
-                                f"min_depth)")
-                continue
-            if mem_chs[v] and not all(mc.response_ready(sweep)
-                                      for mc in mem_chs[v]):
-                # The graph is ready but a memory response is still in the
-                # bank pipe — read_data.empty() on the async_mmap side.
-                mem_waits[v] = mem_waits.get(v, 0) + 1
-                continue
-            token_in: Dict[str, Any] = {fc.src: fc.pop(sweep)
-                                        for fc in in_chs[v]}
-            if not in_chs[v] and v in binding.source_inputs:
-                token_in[SOURCE_KEY] = binding.source_inputs[v][fired[v]]
-            for mc in mem_chs[v]:
-                token_in[mc.stream] = mc.consume(sweep)
-            dev = assign[v]
-            t0 = time.perf_counter()
-            out = binding.programs[v](token_in)
-            _block(out)
-            busy_s[dev] = busy_s.get(dev, 0.0) + time.perf_counter() - t0
-            dev_fired[dev] = dev_fired.get(dev, 0) + 1
-            if isinstance(out, RoutedOutput):
-                for fc in out_chs[v]:
-                    fc.push(out[fc.dst], sweep)
-            else:
-                for fc in out_chs[v]:
-                    fc.push(out, sweep)
-            if v in sinks:
-                sink_outputs[v].append(out)
-            fired[v] += 1
-            fired_this_sweep += 1
-        if transport is not None:
-            for mid, ch_index in transport.step(sweep):
-                channels[ch_index].on_delivered(mid, sweep)
-        if memsys is not None:
-            for rid, ch_index in memsys.step(sweep):
-                mem_channels[ch_index].on_complete(rid, sweep)
-        done = all(n >= T for n in fired.values())
-        if done:
-            break
-        if fired_this_sweep == 0:
-            # Tokens still ripening — or transiting the fabric — are
-            # progress; a silent sweep without any is a cycle of blocked
-            # tasks — diagnose it.
-            ripening = any(vis > sweep for fc in channels
-                           for vis in fc.pending_visibility())
-            ripening = ripening or any(vis > sweep for mc in mem_channels
-                                       for vis in mc.pending_visibility())
-            in_network = transport is not None and transport.active
-            in_memory = memsys is not None and memsys.active
-            if not ripening and not in_network and not in_memory:
-                lines = [f"  {t} ({fired[t]}/{T} firings): " +
-                         ("; ".join(_blockers(t, sweep)) or "unknown")
-                         for t in graph.tasks if fired[t] < T]
-                raise DeadlockError(
-                    "dataflow deadlock at sweep %d — no task can fire and "
-                    "no token is in flight:\n%s" % (sweep, "\n".join(lines)))
-        sweep += 1
-    if not done:
-        raise DeadlockError(
-            f"executor exceeded max_sweeps={max_sweeps} "
-            f"(fired {sum(fired.values())} of {T * len(graph.tasks)} "
-            f"firings) — throughput collapse; check FIFO depths"
-            + (" and fabric link budgets" if transport is not None else ""))
-
-    if transport is not None and transport.active:
-        # Run the network dry (e.g. final back-edge tokens nobody pops) so
-        # the per-link byte conservation identities hold exactly.
-        for mid, ch_index in transport.drain(sweep + 1):
-            channels[ch_index].on_delivered(mid, sweep)
-    if memsys is not None and memsys.active:
-        # Every firing consumed its response, so the banks are normally dry
-        # here — drain defensively so Σ bank bytes == Σ channel bytes holds
-        # even if a program under-consumed.
-        for rid, ch_index in memsys.drain(sweep + 1):
-            mem_channels[ch_index].on_complete(rid, sweep)
-
-    wall = time.perf_counter() - t_start
-    report = build_report(
-        design=design, channels=channels, iterations=T,
-        sweeps=sweep + 1, wall_time_s=wall, device_busy_s=busy_s,
-        device_fired=dev_fired, starvation_events=starve_events,
-        starvation_detail=starve_detail, transport=transport,
-        congestion_waits=congestion_waits, memsys=memsys,
-        mem_channels=mem_channels, mem_waits=mem_waits)
-    outputs = (binding.finalize(sink_outputs)
-               if binding.finalize is not None else sink_outputs)
-    return ExecutionResult(outputs=outputs, sink_outputs=sink_outputs,
-                           report=report)
+    return ExecutionState(
+        design, binding, inputs=inputs, devices=devices,
+        max_sweeps=max_sweeps, starve_limit=starve_limit,
+        check_starvation=check_starvation, fabric=fabric,
+        net_config=net_config, mem=mem).run()

@@ -284,8 +284,13 @@ def build_report(*, design, channels: Sequence[FifoChannel],
     route_cost = 0.0
     for fc in channels:
         gch = fc.graph_channel
-        hops = (len(fabric.route(fc.src_dev, fc.dst_dev))
-                if fabric is not None and fc.inter_device else 0)
+        # Routing happens between *fabric* device ids (== logical ids
+        # except under a tenant device map); a crossing the map collapsed
+        # onto one fabric device never entered the network.
+        routed = (fabric is not None and fc.inter_device
+                  and fc.net_src_dev != fc.net_dst_dev)
+        hops = len(fabric.route(fc.net_src_dev, fc.net_dst_dev)) \
+            if routed else 0
         traces.append(ChannelTrace(
             index=fc.index, src=fc.src, dst=fc.dst,
             src_dev=fc.src_dev, dst_dev=fc.dst_dev,
@@ -309,18 +314,22 @@ def build_report(*, design, channels: Sequence[FifoChannel],
             measured_cost += cluster.comm_cost(
                 fc.src_dev, fc.dst_dev,
                 8.0 * fc.stats.measured_bytes / max(1, fc.stats.tokens))
-            if fabric is not None:
+            if routed:
                 # Eq. 2 re-evaluated per routed link (§4.3 calibration).
                 route_cost += fabric.route_cost(
-                    fc.src_dev, fc.dst_dev, gch.width_bits)
+                    fc.net_src_dev, fc.net_dst_dev, gch.width_bits)
     congestion = None
     if transport is not None:
         from ..net.congestion import measure   # deferred: optional layer
-        congestion = measure(transport)
+        # A tenant's flow-scoped transport view reports only its own
+        # traffic, so the link-conservation identity stays per-tenant.
+        congestion = measure(getattr(transport, "inner", transport),
+                             flow=getattr(transport, "flow", None))
     mem_contention = None
     if memsys is not None:
         from ..mem.contention import measure as _mem_measure
-        mem_contention = _mem_measure(memsys)
+        mem_contention = _mem_measure(getattr(memsys, "inner", memsys),
+                                      flow=getattr(memsys, "flow", None))
     mem_traces = [MemChannelTrace(
         task=mc.task, stream=mc.stream, device=mc.device, bank=mc.bank,
         count=mc.count, issued=mc.stats.issued, consumed=mc.stats.consumed,

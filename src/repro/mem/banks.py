@@ -73,6 +73,10 @@ class BankCounters:
     #                                requests still queued (contention)
     peak_queue_bursts: int = 0     # queued-burst high-water mark
     requests: int = 0              # requests submitted to this bank
+    # Per-flow attribution (multi-tenant accounting) — every served burst
+    # lands in exactly one flow bucket, so Σ_flow == total exactly.
+    flow_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    flow_bursts: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -83,6 +87,7 @@ class _Request:
     total_bytes: int
     bursts_total: int
     submitted_sweep: int
+    flow: int = 0                  # tenant flow id (0 = the only tenant)
     served: int = 0                # bursts served so far
     done_sweep: Optional[int] = None
 
@@ -121,15 +126,16 @@ class MemorySystem:
 
     # -- submission ---------------------------------------------------------
     def submit(self, chan_index: int, device: int, bank: int,
-               nbytes: int, sweep: int) -> int:
-        """Queue one read request on its bank; returns the request id."""
+               nbytes: int, sweep: int, flow: int = 0) -> int:
+        """Queue one read request on its bank; returns the request id.
+        ``flow`` tags the request with its tenant (per-flow accounting)."""
         bid = self.bank_id(device, bank)
         rid = self._next_rid
         self._next_rid += 1
         req = _Request(rid=rid, chan_index=chan_index, bank=bid,
                        total_bytes=int(nbytes),
                        bursts_total=self.config.bursts_for(nbytes),
-                       submitted_sweep=sweep)
+                       submitted_sweep=sweep, flow=flow)
         self._requests[rid] = req
         self._queues[bid].append(rid)
         c = self.counters[bid]
@@ -144,6 +150,10 @@ class MemorySystem:
     @property
     def active(self) -> bool:
         return bool(self._requests)
+
+    def flow_active(self, flow: int) -> bool:
+        """Requests of this tenant flow still queued on some bank."""
+        return any(r.flow == flow for r in self._requests.values())
 
     # -- mechanics ----------------------------------------------------------
     def _burst_bytes(self, req: _Request, served_before: int) -> int:
@@ -185,6 +195,10 @@ class MemorySystem:
                     req.served += 1
                     c.bursts += 1
                     c.bytes += bts
+                    c.flow_bursts[req.flow] = \
+                        c.flow_bursts.get(req.flow, 0) + 1
+                    c.flow_bytes[req.flow] = \
+                        c.flow_bytes.get(req.flow, 0) + bts
                     self.total_served_bytes += bts
                     budget -= 1
                     served_on_bank += 1
@@ -201,6 +215,22 @@ class MemorySystem:
             del self._requests[rid]
         return completed
 
+    def cancel_flow(self, flow: int) -> List[Tuple[int, int]]:
+        """Withdraw every queued request of ``flow`` (tenant teardown).
+
+        Bursts already served stay attributed to the flow (conservation
+        keeps holding); other flows' queues are untouched.  Returns the
+        cancelled ``[(request_id, chan_index)]``.
+        """
+        cancelled = [(rid, r.chan_index)
+                     for rid, r in sorted(self._requests.items())
+                     if r.flow == flow]
+        for rid, _ in cancelled:
+            bank = self._requests[rid].bank
+            self._queues[bank].remove(rid)
+            del self._requests[rid]
+        return cancelled
+
     def drain(self, sweep: int, *, limit: int = 1_000_000
               ) -> List[Tuple[int, int]]:
         """Serve every queued request dry (accounting completeness)."""
@@ -214,10 +244,15 @@ class MemorySystem:
         return completed
 
     # -- reporting ----------------------------------------------------------
-    def utilization(self, bank_id: int) -> float:
+    def utilization(self, bank_id: int, flow: Optional[int] = None) -> float:
         """Served bursts over offered burst-slots (0 when never stepped) —
-        achieved throughput, <= 1 by construction."""
+        achieved throughput, <= 1 by construction.  With ``flow``, only
+        that tenant's bursts count: its achieved share of the bank."""
         if self.sweeps_run == 0:
             return 0.0
         cap = self._budget * self.sweeps_run
-        return self.counters[bank_id].bursts / cap if cap else 0.0
+        if not cap:
+            return 0.0
+        c = self.counters[bank_id]
+        bursts = c.bursts if flow is None else c.flow_bursts.get(flow, 0)
+        return bursts / cap

@@ -85,19 +85,35 @@ class MemContentionReport:
         }
 
 
-def measure(memsys: MemorySystem) -> MemContentionReport:
-    """Measured per-bank usage from a (drained) memory system."""
+def measure(memsys: MemorySystem,
+            flow: Optional[int] = None) -> MemContentionReport:
+    """Measured per-bank usage from a (drained) memory system.
+
+    With ``flow`` set, only that tenant flow's bursts/bytes are reported
+    (utilization becomes the flow's achieved share); the bank-global
+    contention counters are omitted, mirroring the per-flow network view.
+    """
     bpd = memsys.config.banks_per_device
-    banks = [BankUsage(
-        device=bid // bpd, bank=bid % bpd,
-        name=f"dev{bid // bpd}/bank{bid % bpd}",
-        bytes=float(c.bytes), utilization=memsys.utilization(bid),
-        bursts=c.bursts, busy_sweeps=c.busy_sweeps,
-        saturated_sweeps=c.saturated_sweeps,
-        peak_queue_bursts=c.peak_queue_bursts, requests=c.requests)
-        for bid, c in enumerate(memsys.counters)]
+    if flow is None:
+        banks = [BankUsage(
+            device=bid // bpd, bank=bid % bpd,
+            name=f"dev{bid // bpd}/bank{bid % bpd}",
+            bytes=float(c.bytes), utilization=memsys.utilization(bid),
+            bursts=c.bursts, busy_sweeps=c.busy_sweeps,
+            saturated_sweeps=c.saturated_sweeps,
+            peak_queue_bursts=c.peak_queue_bursts, requests=c.requests)
+            for bid, c in enumerate(memsys.counters)]
+    else:
+        banks = [BankUsage(
+            device=bid // bpd, bank=bid % bpd,
+            name=f"dev{bid // bpd}/bank{bid % bpd}",
+            bytes=float(c.flow_bytes.get(flow, 0)),
+            utilization=memsys.utilization(bid, flow),
+            bursts=c.flow_bursts.get(flow, 0))
+            for bid, c in enumerate(memsys.counters)]
     return MemContentionReport(
-        kind="measured", banks=banks, sweeps=memsys.sweeps_run,
+        kind="measured" if flow is None else f"measured/flow{flow}",
+        banks=banks, sweeps=memsys.sweeps_run,
         total_bytes=float(sum(b.bytes for b in banks)))
 
 

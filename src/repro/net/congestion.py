@@ -83,17 +83,35 @@ class CongestionReport:
         }
 
 
-def measure(transport: FabricTransport) -> CongestionReport:
-    """Measured per-link usage from a (drained) transport."""
-    links = [LinkUsage(
-        index=l.index, name=l.name, protocol=l.protocol.name,
-        bytes=float(c.bytes), utilization=transport.utilization(l.index),
-        flits=c.flits, busy_sweeps=c.busy_sweeps,
-        stalled_flits=c.stalled_flits, escape_moves=c.escape_moves,
-        peak_queue=c.peak_queue)
-        for l, c in zip(transport.fabric.links, transport.counters)]
+def measure(transport: FabricTransport,
+            flow: Optional[int] = None) -> CongestionReport:
+    """Measured per-link usage from a (drained) transport.
+
+    With ``flow`` set, only that tenant flow's flits/bytes are reported
+    (utilization becomes the flow's *achieved share* of each link); the
+    contention counters (stalls, escapes, queue HWMs) are link-global and
+    omitted from per-flow views to keep the per-flow conservation identity
+    ``Σ_flow bytes == total bytes`` the only cross-flow coupling.
+    """
+    counters = transport.counters
+    if flow is None:
+        links = [LinkUsage(
+            index=l.index, name=l.name, protocol=l.protocol.name,
+            bytes=float(c.bytes), utilization=transport.utilization(l.index),
+            flits=c.flits, busy_sweeps=c.busy_sweeps,
+            stalled_flits=c.stalled_flits, escape_moves=c.escape_moves,
+            peak_queue=c.peak_queue)
+            for l, c in zip(transport.fabric.links, counters)]
+    else:
+        links = [LinkUsage(
+            index=l.index, name=l.name, protocol=l.protocol.name,
+            bytes=float(c.flow_bytes.get(flow, 0)),
+            utilization=transport.utilization(l.index, flow),
+            flits=c.flow_flits.get(flow, 0))
+            for l, c in zip(transport.fabric.links, counters)]
     return CongestionReport(
-        kind="measured", links=links, sweeps=transport.sweeps_run,
+        kind="measured" if flow is None else f"measured/flow{flow}",
+        links=links, sweeps=transport.sweeps_run,
         total_bytes=float(sum(l.bytes for l in links)))
 
 

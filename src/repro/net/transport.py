@@ -1,5 +1,5 @@
 """Flit transport over a :class:`~repro.net.fabric.Fabric` — contention,
-fair sharing, credit-based backpressure.
+fair sharing, credit-based backpressure, weighted per-tenant flows.
 
 A channel push of ``N`` bytes becomes a **message** of ``ceil(N / mtu)``
 MTU-sized flits that must traverse every link of the message's route in
@@ -10,39 +10,70 @@ link:
   (``bandwidth × sweep_time / mtu``, floor 1) and splits them round-robin
   across the messages queued on it, oldest message first — two channels
   crossing the same physical link genuinely halve each other's throughput;
+* **weighted flow shares** — when the transport is built with
+  ``flow_weights`` (the multi-tenant mode, :mod:`repro.tenants`), every
+  message carries a ``flow`` id and each link runs deficit-round-robin
+  *across flows*: a backlogged flow receives bandwidth proportional to its
+  weight no matter how many messages its tenant stuffs into the queue —
+  the isolation property the admission layer relies on.  Within a flow,
+  messages still share fairly, oldest first.  ``flow_weights=None`` (the
+  default) keeps the legacy per-message round-robin bit for bit;
 * **credit-based backpressure** — each link's ingress buffer holds at most
   ``credits`` flits; a flit advances to the next hop only when a credit is
   free there (the stall is counted), and delivery off the final hop always
   drains (the destination FIFO slot was reserved at push time);
-* **one hop per sweep** — moves are staged and applied after the link loop,
-  so a flit's transit time is at least its hop count (matching Eq. 3's
-  ``dist``) plus any queueing delay.
+* **hop latency** — one hop takes one sweep by default; with
+  ``NetConfig.hop_latency=True`` a hop of link ``l`` takes
+  ``ceil(l.protocol.latency_s / sweep_time_s)`` sweeps (floor 1), putting
+  ``Protocol.latency_s`` on the same time base as the schedule pass: a
+  2-hop route's transit is exactly twice a 1-hop route's.  Moves are
+  staged and applied after the link loop either way, so a flit's transit
+  time is at least its hop count (matching Eq. 3's ``dist``) plus any
+  queueing delay.
 
 Progress is guaranteed: if a sweep moves nothing while messages are active
-(a credit cycle — possible on ring/torus routes), the oldest message's
-head flit advances anyway, counted as an ``escape`` move (the software
-analogue of a NoC escape virtual channel).
+and no flit is mid-transit (a credit cycle — possible on ring/torus
+routes), the oldest message's head flit advances anyway, counted as an
+``escape`` move (the software analogue of a NoC escape virtual channel).
 
 Byte accounting is exact: message flits cross each route link in FIFO
 order, the last flit carrying the partial remainder, so once the network
 drains, per-link byte totals satisfy ``Σ_link bytes == Σ_msg bytes × hops``
-and per-channel delivered bytes equal the bytes submitted.
+and per-channel delivered bytes equal the bytes submitted.  Per-flow
+accounting is exact too: every crossed flit is attributed to its message's
+flow, so ``Σ_flow flow_bytes[l] == bytes[l]`` holds on every link at every
+sweep — the per-tenant conservation identity :mod:`repro.tenants` asserts.
+
+Tenant teardown: :meth:`cancel_flow` withdraws one flow's in-flight
+messages (releasing their link credits) without touching any other flow's
+queues — a dead tenant's traffic drains away while its peers' streams stay
+bit-identical to their solo runs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import math
+from typing import Dict, List, Mapping, Optional, Tuple
 
 from .fabric import Fabric
 
 
 @dataclasses.dataclass(frozen=True)
 class NetConfig:
-    """Fabric-transport knobs (deterministic; defaults suit CI emulation)."""
+    """Fabric-transport knobs (deterministic; defaults suit CI emulation).
+
+    ``hop_latency`` opts into latency-aware calibration: each link hop
+    costs ``ceil(protocol.latency_s / sweep_time_s)`` extra sweeps of wire
+    latency on top of its service sweep, so protocols with different wire
+    latencies (Ethernet vs inter-node 10 G) stop being timing-identical in
+    the sweep domain.  The sweep is the schedule pass's time base too —
+    both price a hop at the same ``latency_s``.
+    """
 
     mtu_bytes: int = 4096          # flit payload (jumbo-frame-ish)
     sweep_time_s: float = 1e-6     # wall time one executor sweep models
     link_credits: int = 8          # per-link ingress buffer, in flits
+    hop_latency: bool = False      # Protocol.latency_s -> per-hop delay
 
     def flits_for(self, nbytes: int) -> int:
         return max(1, -(-int(nbytes) // self.mtu_bytes))
@@ -50,6 +81,16 @@ class NetConfig:
     def budget_flits(self, bandwidth_Bps: float) -> int:
         return max(1, int(bandwidth_Bps * self.sweep_time_s
                           // self.mtu_bytes))
+
+    def hop_delay(self, latency_s: float) -> int:
+        """Sweeps one hop of a link with ``latency_s`` occupies: the
+        service sweep plus ``ceil(latency_s / sweep_time_s)`` in flight —
+        a zero-latency (or legacy-mode) hop is exactly one sweep, and an
+        n-hop route lands ``n × ceil(latency_s / sweep_time_s)`` sweeps
+        after its zero-latency delivery."""
+        if not self.hop_latency:
+            return 1
+        return 1 + math.ceil(latency_s / self.sweep_time_s)
 
 
 @dataclasses.dataclass
@@ -62,6 +103,10 @@ class LinkCounters:
     stalled_flits: int = 0         # flit-moves blocked on downstream credits
     escape_moves: int = 0          # credit-cycle escapes (see module doc)
     peak_queue: int = 0            # ingress-buffer high-water mark, in flits
+    # Per-flow attribution (multi-tenant accounting): every crossed flit
+    # lands in exactly one flow bucket, so sums are exact at every sweep.
+    flow_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    flow_flits: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -75,6 +120,7 @@ class _Message:
     src_queue: int                 # flits not yet injected into route[0]
     at_hop: List[int]              # flits queued at each hop's link
     crossed: List[int]             # flits that have crossed each hop's link
+    flow: int = 0                  # tenant flow id (0 = the only tenant)
     delivered_flits: int = 0
     delivered_sweep: Optional[int] = None
 
@@ -83,30 +129,59 @@ class _Message:
 
 
 class FabricTransport:
-    """Per-execution mutable transport state over one immutable fabric."""
+    """Per-execution mutable transport state over one immutable fabric.
 
-    def __init__(self, fabric: Fabric, config: Optional[NetConfig] = None):
+    ``flow_weights`` switches the link arbiter into weighted multi-flow
+    mode: a mapping ``flow id -> weight`` (positive).  Unknown flows get
+    weight 1.  ``None`` keeps the single-flow legacy arbiter.
+    """
+
+    def __init__(self, fabric: Fabric, config: Optional[NetConfig] = None,
+                 flow_weights: Optional[Mapping[int, float]] = None):
         self.fabric = fabric
         self.config = config or NetConfig()
         self.counters: List[LinkCounters] = [LinkCounters()
                                              for _ in fabric.links]
         self._budget = [self.config.budget_flits(l.protocol.bandwidth_Bps)
                         for l in fabric.links]
+        self._hop_delay = [self.config.hop_delay(l.protocol.latency_s)
+                           for l in fabric.links]
+        self.flow_weights: Optional[Dict[int, float]] = (
+            dict(flow_weights) if flow_weights is not None else None)
+        if self.flow_weights is not None:
+            bad = {f: w for f, w in self.flow_weights.items() if w <= 0}
+            if bad:
+                raise ValueError(f"flow weights must be positive: {bad}")
         self._occupancy: List[int] = [0] * len(fabric.links)
         self._messages: Dict[int, _Message] = {}
         self._next_mid = 0
+        # Flits mid-transit on a multi-sweep hop: (arrival_sweep, message,
+        # next_hop_or_None, payload_bytes).  next_hop None = final delivery.
+        self._transit: List[Tuple[int, _Message, Optional[int], int]] = []
+        # Deficit-round-robin state of the weighted arbiter + injector.
+        self._drr_deficit: Dict[Tuple[int, int], float] = {}
+        self._inj_deficit: Dict[Tuple[int, int], float] = {}
         self.sweeps_run = 0
         self.total_submitted_bytes = 0
         self.total_delivered_bytes = 0
+        self.cancelled_messages = 0
+        self.cancelled_bytes = 0
 
     # -- submission ---------------------------------------------------------
     def submit(self, channel_index: int, src_dev: int, dst_dev: int,
-               nbytes: int, sweep: int) -> int:
-        """Packetize one channel push into a routed message; returns its id."""
+               nbytes: int, sweep: int, flow: int = 0) -> int:
+        """Packetize one channel push into a routed message; returns its id.
+
+        ``flow`` tags the message with its tenant's flow id (weighted
+        arbitration + per-flow byte attribution); single-design executions
+        leave it at 0.
+        """
         route = self.fabric.route(src_dev, dst_dev)
         if not route:
             raise ValueError(f"channel {channel_index}: no network route for "
                              f"a co-located pair {src_dev}->{dst_dev}")
+        if self.flow_weights is not None and flow not in self.flow_weights:
+            raise ValueError(f"flow {flow} has no entry in flow_weights")
         flits = self.config.flits_for(nbytes)
         mid = self._next_mid
         self._next_mid += 1
@@ -114,7 +189,7 @@ class FabricTransport:
             mid=mid, channel_index=channel_index, route=route,
             total_bytes=int(nbytes), flits_total=flits,
             submitted_sweep=sweep, src_queue=flits,
-            at_hop=[0] * len(route), crossed=[0] * len(route))
+            at_hop=[0] * len(route), crossed=[0] * len(route), flow=flow)
         self.total_submitted_bytes += int(nbytes)
         self._inject()
         return mid
@@ -124,8 +199,17 @@ class FabricTransport:
     def active(self) -> bool:
         return bool(self._messages)
 
+    def flow_active(self, flow: int) -> bool:
+        """Messages of this flow still in the network."""
+        return any(m.flow == flow for m in self._messages.values())
+
     # (Per-channel in-flight tracking lives on FifoChannel._pending — the
     # executor's congestion gating reads it there.)
+
+    def _flow_weight(self, flow: int) -> float:
+        if self.flow_weights is None:
+            return 1.0
+        return self.flow_weights.get(flow, 1.0)
 
     # -- mechanics ----------------------------------------------------------
     def _flit_bytes(self, m: _Message, crossed_before: int) -> int:
@@ -137,20 +221,64 @@ class FabricTransport:
         return upper - lower
 
     def _inject(self) -> None:
-        """Move source-queued flits into route[0] ingress while credits last
-        (injection is FIFO in message-id order — submission order)."""
+        """Move source-queued flits into route[0] ingress while credits
+        last.  Single-flow (legacy) injection is FIFO in message-id order —
+        submission order; with ``flow_weights`` the ingress window itself
+        is shared by weighted DRR, or the first submitter would monopolize
+        the link's credit buffer and the arbiter downstream would never
+        even see a competing flow's flits."""
+        if self.flow_weights is None:
+            for m in sorted(self._messages.values(), key=lambda m: m.mid):
+                if m.src_queue <= 0:
+                    continue
+                first = m.route[0]
+                room = self.config.link_credits - self._occupancy[first]
+                take = min(m.src_queue, room)
+                if take > 0:
+                    m.src_queue -= take
+                    m.at_hop[0] += take
+                    self._occupancy[first] += take
+                    self.counters[first].peak_queue = max(
+                        self.counters[first].peak_queue,
+                        self._occupancy[first])
+            return
+        by_link: Dict[int, Dict[int, List[_Message]]] = {}
         for m in sorted(self._messages.values(), key=lambda m: m.mid):
-            if m.src_queue <= 0:
-                continue
-            first = m.route[0]
-            room = self.config.link_credits - self._occupancy[first]
-            take = min(m.src_queue, room)
-            if take > 0:
-                m.src_queue -= take
-                m.at_hop[0] += take
-                self._occupancy[first] += take
-                self.counters[first].peak_queue = max(
-                    self.counters[first].peak_queue, self._occupancy[first])
+            if m.src_queue > 0:
+                by_link.setdefault(m.route[0], {}) \
+                       .setdefault(m.flow, []).append(m)
+        for li, by_flow in sorted(by_link.items()):
+            # Credit the free ingress room to the backlogged flows split
+            # by weight (GPS-normalized, like the link arbiter), then hand
+            # it out one flit at a time to the largest deficit: which flow
+            # submitted first stops mattering, and a flow shorted now
+            # (deficit carried) wins later — weighted sharing of a
+            # *bounded* credit window.
+            room = self.config.link_credits - self._occupancy[li]
+            wsum = sum(self._flow_weight(f) for f in by_flow)
+            deficit = {f: self._inj_deficit.get((li, f), 0.0)
+                       + room * self._flow_weight(f) / wsum
+                       for f in by_flow}
+            while (self._occupancy[li] < self.config.link_credits
+                   and by_flow):
+                flow = max(by_flow, key=lambda f: (deficit[f], -f))
+                if deficit[flow] < 1.0:
+                    break                  # everyone saves up for later
+                m = by_flow[flow][0]
+                m.src_queue -= 1
+                m.at_hop[0] += 1
+                self._occupancy[li] += 1
+                deficit[flow] -= 1.0
+                if m.src_queue <= 0:
+                    by_flow[flow].pop(0)
+                    if not by_flow[flow]:
+                        del by_flow[flow]
+            for flow, d in deficit.items():
+                # A flow with nothing left to inject forfeits its
+                # remainder (standard DRR — no banking idle sweeps).
+                self._inj_deficit[(li, flow)] = d if flow in by_flow else 0.0
+            self.counters[li].peak_queue = max(
+                self.counters[li].peak_queue, self._occupancy[li])
 
     def _advance(self, m: _Message, hop: int, sweep: int,
                  moved: List[Tuple[_Message, int]], escape: bool) -> None:
@@ -162,19 +290,48 @@ class FabricTransport:
         c = self.counters[li]
         c.flits += 1
         c.bytes += bts
+        c.flow_flits[m.flow] = c.flow_flits.get(m.flow, 0) + 1
+        c.flow_bytes[m.flow] = c.flow_bytes.get(m.flow, 0) + bts
         if escape:
             c.escape_moves += 1
+        delay = self._hop_delay[li]
         if hop + 1 < len(m.route):
-            moved.append((m, hop + 1))      # staged: lands next link loop end
             nxt = m.route[hop + 1]
             self._occupancy[nxt] += 1       # credit consumed immediately
             self.counters[nxt].peak_queue = max(
                 self.counters[nxt].peak_queue, self._occupancy[nxt])
+            if delay <= 1:
+                moved.append((m, hop + 1))  # staged: lands next link loop end
+            else:
+                self._transit.append((sweep + delay, m, hop + 1, bts))
         else:
-            m.delivered_flits += 1
-            self.total_delivered_bytes += bts
-            if m.done():
-                m.delivered_sweep = sweep
+            if delay <= 1:
+                self._deliver(m, bts, sweep)
+            else:
+                self._transit.append((sweep + delay - 1, m, None, bts))
+
+    def _deliver(self, m: _Message, bts: int, sweep: int) -> None:
+        m.delivered_flits += 1
+        self.total_delivered_bytes += bts
+        if m.done():
+            m.delivered_sweep = sweep
+
+    def _land_transit(self, sweep: int) -> None:
+        """Flits whose multi-sweep hop completes this sweep land now —
+        either queued at their next hop or delivered off the final one."""
+        if not self._transit:
+            return
+        due = [e for e in self._transit if e[0] <= sweep]
+        if not due:
+            return
+        self._transit = [e for e in self._transit if e[0] > sweep]
+        for _, m, nxt_hop, bts in due:
+            if m.mid not in self._messages:
+                continue                     # flow was cancelled mid-transit
+            if nxt_hop is None:
+                self._deliver(m, bts, sweep)
+            else:
+                m.at_hop[nxt_hop] += 1
 
     def step(self, sweep: int) -> List[Tuple[int, int]]:
         """Arbitrate every link for one sweep.
@@ -183,51 +340,29 @@ class FabricTransport:
         flit was delivered this sweep (completion order is deterministic).
         """
         self.sweeps_run += 1
+        self._land_transit(sweep)
         moved: List[Tuple[_Message, int]] = []   # staged inter-hop arrivals
         crossed_links: List[int] = []
         any_flit_moved = False
         order = sorted(self._messages.values(), key=lambda m: m.mid)
-        for li, link in enumerate(self.fabric.links):
+        for li in range(len(self.fabric.links)):
             # Messages with flits queued on this link, oldest first.
             queued = [m for m in order
                       if any(m.route[h] == li and m.at_hop[h] > 0
                              for h in range(len(m.route)))]
             if not queued:
                 continue
-            budget = self._budget[li]
-            sent_on_link = 0
-            # Round-robin one flit per message per lap until budget or
-            # queues (or credits) run out.
-            progressing = True
-            blocked: set = set()
-            while budget > 0 and progressing:
-                progressing = False
-                for m in queued:
-                    if budget <= 0:
-                        break
-                    if m.mid in blocked:
-                        continue
-                    hop = next((h for h in range(len(m.route))
-                                if m.route[h] == li and m.at_hop[h] > 0),
-                               None)
-                    if hop is None:
-                        continue
-                    if hop + 1 < len(m.route):
-                        nxt = m.route[hop + 1]
-                        if self._occupancy[nxt] >= self.config.link_credits:
-                            self.counters[li].stalled_flits += 1
-                            blocked.add(m.mid)
-                            continue
-                    self._advance(m, hop, sweep, moved, escape=False)
-                    budget -= 1
-                    sent_on_link += 1
-                    progressing = True
-            if sent_on_link:
+            if self.flow_weights is None:
+                sent = self._arbitrate_legacy(li, queued, sweep, moved)
+            else:
+                sent = self._arbitrate_weighted(li, queued, sweep, moved)
+            if sent:
                 crossed_links.append(li)
                 any_flit_moved = True
         # Escape valve: a credit cycle (ring/torus routes) could otherwise
         # stall every link forever — force the oldest queued flit through.
-        if not any_flit_moved and self._messages:
+        # Flits mid-transit on a multi-sweep hop are progress, not a cycle.
+        if not any_flit_moved and self._messages and not self._transit:
             for m in order:
                 hop = next((h for h in range(len(m.route))
                             if m.at_hop[h] > 0), None)
@@ -242,11 +377,149 @@ class FabricTransport:
             m.at_hop[hop] += 1
         self._inject()
         completed = [(m.mid, m.channel_index)
-                     for m in order
+                     for m in sorted(self._messages.values(),
+                                     key=lambda m: m.mid)
                      if m.done() and m.delivered_sweep == sweep]
         for mid, _ in completed:
             del self._messages[mid]
         return completed
+
+    def _arbitrate_legacy(self, li: int, queued: List[_Message], sweep: int,
+                          moved: List[Tuple[_Message, int]]) -> int:
+        """Pre-tenant arbiter: round-robin one flit per *message* per lap."""
+        budget = self._budget[li]
+        sent_on_link = 0
+        progressing = True
+        blocked: set = set()
+        while budget > 0 and progressing:
+            progressing = False
+            for m in queued:
+                if budget <= 0:
+                    break
+                if m.mid in blocked:
+                    continue
+                hop = next((h for h in range(len(m.route))
+                            if m.route[h] == li and m.at_hop[h] > 0),
+                           None)
+                if hop is None:
+                    continue
+                if hop + 1 < len(m.route):
+                    nxt = m.route[hop + 1]
+                    if self._occupancy[nxt] >= self.config.link_credits:
+                        self.counters[li].stalled_flits += 1
+                        blocked.add(m.mid)
+                        continue
+                self._advance(m, hop, sweep, moved, escape=False)
+                budget -= 1
+                sent_on_link += 1
+                progressing = True
+        return sent_on_link
+
+    def _arbitrate_weighted(self, li: int, queued: List[_Message],
+                            sweep: int,
+                            moved: List[Tuple[_Message, int]]) -> int:
+        """Weight-proportional link service via GPS-normalized deficits.
+
+        Each sweep the link's whole flit budget is credited to the
+        backlogged flows *split by weight* (Σ credit == budget — crediting
+        a full quantum per flow regardless of capacity would let whichever
+        flow is ahead stay ahead forever when Σ weights exceeds the
+        budget).  Flits are then spent largest-deficit-first, one at a
+        time, which makes the outcome independent of flow id or submission
+        order; fractional remainders carry across sweeps, so shares
+        converge to the weights within one flit per link.  A flow that
+        empties or blocks on downstream credits forfeits its remainder —
+        standard DRR, no banking idle sweeps into a later burst.  Within a
+        flow, messages are served oldest-first (FIFO).
+        """
+        budget = self._budget[li]
+        sent_on_link = 0
+        by_flow: Dict[int, List[_Message]] = {}
+        for m in queued:
+            by_flow.setdefault(m.flow, []).append(m)
+        wsum = sum(self._flow_weight(f) for f in by_flow)
+        deficit = {f: self._drr_deficit.get((li, f), 0.0)
+                   + budget * self._flow_weight(f) / wsum
+                   for f in by_flow}
+        blocked: set = set()
+        live = dict(by_flow)           # flows that may still have servable
+        while budget > 0 and live:
+            flow = max(live, key=lambda f: (deficit[f], -f))
+            if deficit[flow] < 1.0:
+                break                  # fractions carry to the next sweep
+            advanced = False
+            for m in live[flow]:       # oldest message first
+                if m.mid in blocked:
+                    continue
+                hop = next((h for h in range(len(m.route))
+                            if m.route[h] == li and m.at_hop[h] > 0),
+                           None)
+                if hop is None:
+                    continue
+                if hop + 1 < len(m.route):
+                    nxt = m.route[hop + 1]
+                    if self._occupancy[nxt] >= self.config.link_credits:
+                        self.counters[li].stalled_flits += 1
+                        blocked.add(m.mid)
+                        continue
+                self._advance(m, hop, sweep, moved, escape=False)
+                deficit[flow] -= 1.0
+                budget -= 1
+                sent_on_link += 1
+                advanced = True
+                break
+            if not advanced:
+                # Nothing servable: forfeit the deficit, leave the ring.
+                deficit[flow] = 0.0
+                del live[flow]
+        for f, d in deficit.items():
+            has_more = f in live and any(
+                m.mid not in blocked
+                and any(m.route[h] == li and m.at_hop[h] > 0
+                        for h in range(len(m.route)))
+                for m in live[f])
+            self._drr_deficit[(li, f)] = d if has_more else 0.0
+        return sent_on_link
+
+    # -- tenant teardown ----------------------------------------------------
+    def cancel_flow(self, flow: int) -> List[Tuple[int, int]]:
+        """Withdraw every in-flight message of ``flow`` (device kill).
+
+        Queued flits release their link credits immediately; flits
+        mid-transit on a multi-sweep hop evaporate on landing.  Other
+        flows' queues, deficits, and accounting are untouched — bytes the
+        cancelled messages already moved stay attributed to ``flow``, so
+        per-link ``Σ_flow flow_bytes == bytes`` keeps holding exactly.
+
+        Returns the cancelled ``[(message_id, channel_index)]``.
+        """
+        cancelled: List[Tuple[int, int]] = []
+        for mid in sorted(self._messages):
+            m = self._messages[mid]
+            if m.flow != flow:
+                continue
+            for h, li in enumerate(m.route):
+                if m.at_hop[h] > 0:
+                    self._occupancy[li] -= m.at_hop[h]
+                    m.at_hop[h] = 0
+            # Credits of flits mid-transit were charged to their *next*
+            # hop's link at advance time — release those too.
+            for _, tm, nxt_hop, _bts in self._transit:
+                if tm.mid == mid and nxt_hop is not None:
+                    self._occupancy[tm.route[nxt_hop]] -= 1
+            self.cancelled_messages += 1
+            self.cancelled_bytes += m.total_bytes
+            cancelled.append((mid, m.channel_index))
+        for mid, _ in cancelled:
+            del self._messages[mid]
+        self._transit = [e for e in self._transit
+                         if e[1].mid in self._messages]
+        # A dead flow's banked deficits die with it — a later incarnation
+        # (fresh flow id) must start clean anyway.
+        for store in (self._drr_deficit, self._inj_deficit):
+            for key in [k for k in store if k[1] == flow]:
+                del store[key]
+        return cancelled
 
     def drain(self, sweep: int, *, limit: int = 1_000_000
               ) -> List[Tuple[int, int]]:
@@ -261,9 +534,19 @@ class FabricTransport:
         return completed
 
     # -- reporting ----------------------------------------------------------
-    def utilization(self, link_index: int) -> float:
-        """Crossed flits over offered flit-sweeps (0 when never stepped)."""
+    def utilization(self, link_index: int,
+                    flow: Optional[int] = None) -> float:
+        """Crossed flits over offered flit-sweeps (0 when never stepped).
+        With ``flow``, only that flow's flits count — its achieved share."""
         if self.sweeps_run == 0:
             return 0.0
         cap = self._budget[link_index] * self.sweeps_run
-        return self.counters[link_index].flits / cap if cap else 0.0
+        if not cap:
+            return 0.0
+        c = self.counters[link_index]
+        flits = c.flits if flow is None else c.flow_flits.get(flow, 0)
+        return flits / cap
+
+    def flow_link_bytes(self, flow: int) -> int:
+        """Σ over links of this flow's crossed bytes (hop-weighted)."""
+        return sum(c.flow_bytes.get(flow, 0) for c in self.counters)

@@ -1,0 +1,62 @@
+"""Re-compile-and-re-admit — the tenant layer's half of the fault story.
+
+The substrate half (cancel the dead tenant's flits and bank requests,
+release its credits, leave every peer's stream untouched) lives in the
+transport and the memory system; this module owns what happens next: the
+paper's elasticity claim is that a TAPA-CS design is *re-compilable* onto
+whatever devices survive, because the compile flow is a pure function of
+(graph, cluster, options).  :func:`recompile` exercises exactly that —
+same graph, same options, a cluster shrunk to the surviving device count —
+and the server re-admits the result under a fresh flow id.
+
+The degraded design is a first-class :class:`CompiledDesign`: partitioned,
+depth-balanced, scheduled.  Nothing about it knows it is a recovery
+artifact — which is the point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..compiler.artifact import CompiledDesign
+
+
+def shrink_cluster(cluster, ndev: int):
+    """The same cluster with ``ndev`` devices on the same topology family.
+
+    Ring/daisy-chain/bus shrink naturally; anything else (mesh, star,
+    hypercube — shapes that don't gracefully lose one device) degrades to
+    a daisy-chain of the survivors, the weakest layout that still routes.
+    Node grouping is dropped once the survivors fit one node.
+    """
+    from ..core.topology import Bus, DaisyChain, Ring
+    topo = cluster.topology
+    if isinstance(topo, Ring) and ndev >= 3:
+        new_topo = Ring(ndev)
+    elif isinstance(topo, Bus):
+        new_topo = Bus(ndev)
+    else:
+        new_topo = DaisyChain(ndev)
+    dpn = cluster.devices_per_node
+    if dpn is not None and ndev <= dpn:
+        dpn = None
+    return dataclasses.replace(cluster, topology=new_topo,
+                               devices_per_node=dpn)
+
+
+def recompile(design: CompiledDesign, ndev: int, *,
+              time_limit: Optional[float] = None) -> CompiledDesign:
+    """Re-run the full pass pipeline on the surviving device count.
+
+    Pins and fabric from the original options are dropped: the pins named
+    devices that may no longer exist, and the tenant's network is the
+    *shared* fabric it is re-admitted onto, not a private one.
+    """
+    from ..compiler import compile as tapa_compile
+    if ndev < 1:
+        raise ValueError("need at least one surviving device")
+    cluster = shrink_cluster(design.cluster, ndev)
+    options = design.options.replace(pins=None, fabric=None)
+    if time_limit is not None:
+        options = options.replace(partition_time_limit=time_limit)
+    return tapa_compile(design.graph, cluster, options)

@@ -157,6 +157,141 @@ def test_transport_byte_conservation_is_exact():
 
 
 # ---------------------------------------------------------------------------
+# Latency-aware calibration: Protocol.latency_s -> per-hop sweep delay.
+# ---------------------------------------------------------------------------
+
+def _delivery_sweep(fab, cfg, src, dst):
+    tr = FabricTransport(fab, cfg)
+    tr.submit(0, src, dst, cfg.mtu_bytes, 0)     # exactly one flit
+    s = 0
+    while tr.active:
+        if tr.step(s):
+            return s
+        s += 1
+        assert s < 10_000, "transport failed to make progress"
+    raise AssertionError("message vanished without delivering")
+
+
+def test_hop_latency_two_hops_cost_exactly_twice_the_delay():
+    """The satellite's identity: with ``hop_latency`` on, an n-hop route
+    delivers exactly ``n × ceil(latency_s / sweep_time)`` sweeps later
+    than its zero-latency delivery — measured for n=1 and n=2."""
+    import dataclasses as dc
+    import math
+    fab = build_fabric(DaisyChain(3))            # routes 0->1 and 0->1->2
+    base = _cfg()
+    lat = dc.replace(base, hop_latency=True)
+    delay = math.ceil(ETHERNET_100G.latency_s / base.sweep_time_s)
+    assert delay > 1                             # the knob actually bites
+    assert lat.hop_delay(ETHERNET_100G.latency_s) == 1 + delay
+    one_base = _delivery_sweep(fab, base, 0, 1)
+    two_base = _delivery_sweep(fab, base, 0, 2)
+    one_lat = _delivery_sweep(fab, lat, 0, 1)
+    two_lat = _delivery_sweep(fab, lat, 0, 2)
+    assert one_lat - one_base == delay
+    assert two_lat - two_base == 2 * delay
+
+
+def test_hop_latency_off_is_the_legacy_time_base():
+    fab = build_fabric(DaisyChain(3))
+    cfg = _cfg()
+    assert cfg.hop_delay(ETHERNET_100G.latency_s) == 1
+    assert _delivery_sweep(fab, cfg, 0, 2) == _delivery_sweep(fab, cfg, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Weighted flows: DRR shares, per-flow attribution, cancellation.
+# ---------------------------------------------------------------------------
+
+def test_weighted_flows_split_a_backlogged_link_by_weight():
+    """Two flows saturate one link with equal payloads at weights 2:1 —
+    the heavy flow finishes first, and at its finish the light flow has
+    crossed about half as many flits (its 1:2 DRR share)."""
+    fab = build_fabric(DaisyChain(2))
+    tr = FabricTransport(fab, _cfg(), flow_weights={0: 2.0, 1: 1.0})
+    flits = 30
+    tr.submit(0, 0, 1, flits * 64, 0, flow=0)
+    tr.submit(1, 0, 1, flits * 64, 0, flow=1)
+    link = fab.route(0, 1)[0]
+    s, heavy_done = 0, None
+    while tr.active:
+        for _, ch in tr.step(s):
+            if ch == 0 and heavy_done is None:
+                heavy_done = s
+                light_flits = tr.counters[link].flow_flits.get(1, 0)
+        s += 1
+        assert s < 10_000
+    assert heavy_done is not None and tr.flow_active(0) is False
+    # Light flow's share while both were backlogged: 1/3 of the crossed
+    # flits (±1 flit of DRR quantization) against the heavy flow's 30.
+    assert abs(light_flits - flits / 2) <= 2, light_flits
+    # Everything still drains and the per-flow buckets stay exact.
+    c = tr.counters[link]
+    assert c.flow_flits[0] == c.flow_flits[1] == flits
+    assert sum(c.flow_bytes.values()) == c.bytes
+
+
+def test_flow_byte_attribution_sums_exactly_per_link():
+    fab = build_fabric(Ring(4))
+    tr = FabricTransport(fab, _cfg(mtu=100),
+                         flow_weights={0: 1.0, 1: 3.0})
+    payloads = [(0, 2, 1234, 0), (1, 3, 999, 1), (3, 0, 100, 0),
+                (2, 1, 4001, 1)]
+    for ch, (s, d, n, f) in enumerate(payloads):
+        tr.submit(ch, s, d, n, 0, flow=f)
+    _drain(tr)
+    for c in tr.counters:
+        assert sum(c.flow_bytes.values()) == c.bytes
+        assert sum(c.flow_flits.values()) == c.flits
+    per_flow = {f: sum(n * fab.hops(s, d)
+                       for s, d, n, g in payloads if g == f)
+                for f in (0, 1)}
+    assert tr.flow_link_bytes(0) == per_flow[0]
+    assert tr.flow_link_bytes(1) == per_flow[1]
+
+
+def test_cancel_flow_drains_without_touching_peers():
+    """Cancelling one flow mid-drain releases its credits and leaves the
+    surviving flow's stream and accounting untouched — the substrate half
+    of the tenant fault story."""
+    fab = build_fabric(DaisyChain(3))
+    mk = lambda: FabricTransport(fab, _cfg(),  # noqa: E731
+                                 flow_weights={0: 1.0, 1: 1.0})
+    solo = mk()
+    solo.submit(1, 0, 2, 20 * 64, 0, flow=1)
+    _, solo_sweeps = _drain(solo)
+    solo_bytes = solo.flow_link_bytes(1)
+
+    tr = mk()
+    tr.submit(0, 0, 2, 20 * 64, 0, flow=0)
+    tr.submit(1, 0, 2, 20 * 64, 0, flow=1)
+    for s in range(3):
+        tr.step(s)
+    cancelled = tr.cancel_flow(0)
+    assert cancelled and not tr.flow_active(0)
+    assert tr.flow_active(1)
+    done, end = _drain(tr, start=3)
+    assert [ch for _, ch in done] == [1]         # only the survivor lands
+    # Post-cancel the survivor owns the full pipe: it finishes within the
+    # solo bound (plus the shared prefix), and conservation stays exact.
+    assert end <= solo_sweeps + 3
+    assert tr.flow_link_bytes(1) == solo_bytes
+    for c in tr.counters:
+        assert sum(c.flow_bytes.values()) == c.bytes
+    # Cancelled bytes that already crossed stay attributed to flow 0.
+    assert tr.flow_link_bytes(0) > 0
+
+
+def test_flow_weights_validation():
+    fab = build_fabric(DaisyChain(2))
+    with pytest.raises(ValueError):
+        FabricTransport(fab, _cfg(), flow_weights={0: 0.0})
+    tr = FabricTransport(fab, _cfg(), flow_weights={0: 1.0})
+    with pytest.raises(ValueError):
+        tr.submit(0, 0, 1, 64, 0, flow=7)        # undeclared flow
+
+
+# ---------------------------------------------------------------------------
 # Executed designs: acceptance — bit-identical numerics + conservation.
 # ---------------------------------------------------------------------------
 

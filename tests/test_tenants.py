@@ -1,0 +1,327 @@
+"""repro.tenants — multi-tenant serving over one shared fabric.
+
+Covers the tentpole's acceptance criteria: two tenants co-running over one
+shared ``FabricTransport`` stay bit-identical to their solo runs with
+exact per-tenant link-byte conservation; the weighted-fair fluid model
+keeps an oversubscribed tenant from starving a peer below 90% of its fair
+share; a device kill mid-flight drains the victim without perturbing the
+survivor, and the victim re-admits onto its surviving devices after a
+re-compile.  Plus the traffic generator's determinism and the admission
+controller's admit/queue/reject + priority-aging semantics.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.apps import APPS
+from repro.compiler import CompileOptions, compile as tapa_compile
+from repro.core import Bus, DaisyChain, Ring, fpga_ring_cluster
+from repro.core.topology import Cluster, ALVEO_U55C
+from repro.exec import bind_programs, execute
+from repro.net import cluster_fabric
+from repro.net.transport import NetConfig
+from repro.tenants import (ADMIT, QUEUE, REJECT, SLO, AdmissionController,
+                           DeviceKill, Tenant, TenantLoad, TenantServer,
+                           TrafficConfig, bit_identical, fair_share,
+                           generate, isolation_check, load_sweep, merge,
+                           offered_load, recompile, shrink_cluster,
+                           simulate)
+
+# ---------------------------------------------------------------------------
+# Traffic: seeded, open-loop, deterministic.
+# ---------------------------------------------------------------------------
+
+_TRAFFIC = TrafficConfig(rate_rps=200.0, mean_size=4096.0, duration_s=2.0)
+
+
+def test_traffic_is_deterministic_per_seed_and_tenant():
+    a1 = generate(_TRAFFIC, 0, np.random.default_rng([7, 0]))
+    a2 = generate(_TRAFFIC, 0, np.random.default_rng([7, 0]))
+    b = generate(_TRAFFIC, 1, np.random.default_rng([7, 1]))
+    assert a1 == a2
+    assert a1 != b
+    assert all(r.tenant == 0 for r in a1)
+    assert all(r.size > 0 for r in a1)
+    arr = [r.t_arrival for r in a1]
+    assert arr == sorted(arr) and arr[-1] <= _TRAFFIC.duration_s
+
+
+def test_traffic_rate_and_mean_size_are_calibrated():
+    cfg = dataclasses.replace(_TRAFFIC, duration_s=50.0)
+    reqs = generate(cfg, 0, np.random.default_rng([3, 0]))
+    rate = len(reqs) / cfg.duration_s
+    assert rate == pytest.approx(cfg.rate_rps, rel=0.1)
+    mean = np.mean([r.size for r in reqs])
+    assert mean == pytest.approx(cfg.mean_size, rel=0.2)
+    assert offered_load(reqs, cfg.duration_s) == pytest.approx(
+        cfg.rate_rps * cfg.mean_size, rel=0.25)
+    assert offered_load([], 0.0) == 0.0
+
+
+def test_traffic_scaled_and_merge():
+    doubled = _TRAFFIC.scaled(2.0)
+    assert doubled.rate_rps == 2 * _TRAFFIC.rate_rps
+    a = generate(_TRAFFIC, 0, np.random.default_rng([1, 0]))
+    b = generate(_TRAFFIC, 1, np.random.default_rng([1, 1]))
+    m = merge([a, b])
+    assert len(m) == len(a) + len(b)
+    assert [r.t_arrival for r in m] == sorted(r.t_arrival for r in m)
+
+
+def test_profiles_modulate_the_rate():
+    diurnal = dataclasses.replace(_TRAFFIC, profile="diurnal", swing=0.5,
+                                  period_s=10.0)
+    assert diurnal.rate_at(2.5) > diurnal.rate_at(0.0) > diurnal.rate_at(7.5)
+    ramp = dataclasses.replace(_TRAFFIC, profile="ramp", swing=0.9,
+                               duration_s=20.0)
+    assert ramp.rate_at(20.0) > ramp.rate_at(0.0)
+    # A steep ramp skews the stream late: its median arrival lands well
+    # past the flat stream's mid-horizon median.
+    flat = dataclasses.replace(_TRAFFIC, duration_s=20.0)
+    mf = np.median([r.t_arrival
+                    for r in generate(flat, 0, np.random.default_rng([5, 0]))])
+    mr = np.median([r.t_arrival
+                    for r in generate(ramp, 0, np.random.default_rng([5, 0]))])
+    assert mr > mf + 2.0
+
+
+# ---------------------------------------------------------------------------
+# Admission: admit / queue / reject + deadline-aware priority aging.
+# ---------------------------------------------------------------------------
+
+def _req(rid, tenant, t, size=1000.0):
+    from repro.tenants import Request
+    return Request(rid=rid, tenant=tenant, t_arrival=t, size=size)
+
+
+def test_admission_three_way_call():
+    slo = SLO(target_latency_s=1.0, max_inflight=1, deadline_factor=3.0)
+    ctrl = AdmissionController({0: slo}, {0: 1000.0})  # 1 req/s of work
+    assert ctrl.offer(_req(0, 0, 0.0), 0.0) == ADMIT
+    # One second of backlog ahead: finishes at ~2.1s, inside the 3.1s
+    # deadline — but the single service slot is taken, so it queues.
+    assert ctrl.offer(_req(1, 0, 0.1), 0.1) == QUEUE
+    # Three more seconds of work could only finish at ~5.2s > 3.2s.
+    assert ctrl.offer(_req(2, 0, 0.2, size=3000.0), 0.2) == REJECT
+    assert ctrl.stats[0].admitted == 1
+    assert ctrl.stats[0].queued == 1
+    assert ctrl.stats[0].rejected == 1
+
+
+def test_priority_aging_prefers_tight_slo():
+    tight = SLO(target_latency_s=0.1, max_inflight=1, deadline_factor=40.0)
+    loose = SLO(target_latency_s=10.0, max_inflight=1, deadline_factor=4.0)
+    ctrl = AdmissionController({0: loose, 1: tight},
+                              {0: 1e6, 1: 1e6})
+    assert ctrl.offer(_req(0, 0, 0.0), 0.0) == ADMIT
+    assert ctrl.offer(_req(1, 1, 0.0), 0.0) == ADMIT
+    # The loose request has waited longer in wall time...
+    assert ctrl.offer(_req(2, 0, 0.1), 0.1) == QUEUE
+    assert ctrl.offer(_req(3, 1, 0.3), 0.3) == QUEUE
+    ctrl.complete(_req(0, 0, 0.0))
+    ctrl.complete(_req(1, 1, 0.0))
+    # ...but age normalized by target ranks the tight one far ahead.
+    first = ctrl.release(1.0)
+    assert first.tenant == 1 and first.rid == 3
+    second = ctrl.release(1.0)
+    assert second.tenant == 0 and second.rid == 2
+
+
+def test_expired_pending_is_shed_as_rejected():
+    slo = SLO(target_latency_s=0.1, max_inflight=1, deadline_factor=2.0)
+    ctrl = AdmissionController({0: slo}, {0: 1e9})
+    assert ctrl.offer(_req(0, 0, 0.0), 0.0) == ADMIT
+    assert ctrl.offer(_req(1, 0, 0.0), 0.0) == QUEUE
+    ctrl.complete(_req(0, 0, 0.0))
+    assert ctrl.release(10.0) is None          # deadline long gone
+    assert ctrl.stats[0].rejected == 1
+    assert ctrl.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Fluid serving simulation: SLO curves + the isolation invariant.
+# ---------------------------------------------------------------------------
+
+def _load(name, rate_frac, capacity, weight=1.0, mean=65536.0):
+    share = capacity * weight / 2.0
+    return TenantLoad(
+        name=name,
+        slo=SLO(target_latency_s=16 * mean / share, weight=weight,
+                max_inflight=8),
+        traffic=TrafficConfig(rate_rps=rate_frac * share / mean,
+                              mean_size=mean, duration_s=2.0))
+
+
+def test_simulate_underload_meets_slo():
+    cap = 1e8
+    res = simulate({0: _load("a", 0.3, cap), 1: _load("b", 0.3, cap)}, cap,
+                   seed=1)
+    for t in (0, 1):
+        st = res.tenants[t]
+        assert st.completed > 0
+        assert st.rejected <= 0.01 * st.offered
+        assert st.completed_in_slo >= 0.99 * st.completed
+        assert st.goodput_bytes > 0
+
+
+def test_load_sweep_goodput_folds_over_at_saturation():
+    cap = 1e8
+    loads = {0: _load("a", 1.0, cap), 1: _load("b", 1.0, cap)}
+    rows = load_sweep(loads, cap, [0.25, 1.0, 4.0], seed=2)
+    assert [r["load_factor"] for r in rows] == [0.25, 1.0, 4.0]
+    g = [sum(t["goodput_Bps"] for t in r["tenants"].values())
+         for r in rows]
+    assert g[1] > g[0]                         # more load, more goodput...
+    assert g[2] <= cap                          # ...but never above the pipe
+    p99 = [r["tenants"]["a"]["p99_latency_s"] for r in rows]
+    assert p99[2] >= p99[0]                     # saturation costs latency
+    # The overloaded point sheds work at the door instead of serving late.
+    assert rows[2]["tenants"]["a"]["rejected"] > 0
+
+
+def test_isolation_invariant_against_an_oversubscribing_peer():
+    iso = isolation_check(1e9, seed=0)
+    assert iso["isolated"]
+    assert iso["victim_share_frac"] >= 0.9
+    assert iso["aggressor"]["rejected"] > 0     # the 2x load is shed
+
+
+def test_fair_share_is_weight_proportional():
+    w = {0: 3.0, 1: 1.0}
+    assert fair_share(8e9, w, 0) == pytest.approx(6e9)
+    assert fair_share(8e9, w, 1) == pytest.approx(2e9)
+
+
+# ---------------------------------------------------------------------------
+# Recovery: cluster shrink + full re-compile.
+# ---------------------------------------------------------------------------
+
+def test_shrink_cluster_topology_families():
+    ring = fpga_ring_cluster(4)
+    assert isinstance(shrink_cluster(ring, 3).topology, Ring)
+    assert isinstance(shrink_cluster(ring, 2).topology, DaisyChain)
+    bus = Cluster(ALVEO_U55C, Bus(4))
+    shrunk = shrink_cluster(bus, 3)
+    assert isinstance(shrunk.topology, Bus)
+    assert shrunk.topology.num_devices == 3
+    grouped = fpga_ring_cluster(4, devices_per_node=2)
+    assert shrink_cluster(grouped, 2).devices_per_node is None
+
+
+# ---------------------------------------------------------------------------
+# The tenant server: shared-substrate co-execution (the acceptance tests).
+# ---------------------------------------------------------------------------
+
+_OPTS = CompileOptions(balance_kind="LUT", balance_tol=0.8,
+                       exact_limit=1500, floorplan_devices=(0,))
+_SPECS = {"a": {"seed": 0}, "b": {"seed": 7}}
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    graphs = {n: APPS["stencil"].build_graph(2) for n in _SPECS}
+    designs = {n: tapa_compile(graphs[n], fpga_ring_cluster(2), _OPTS)
+               for n in _SPECS}
+    solo = {n: execute(designs[n], bind_programs(graphs[n], _SPECS[n]),
+                       fabric=None) for n in _SPECS}
+    return graphs, designs, solo
+
+
+def _tenants(designs):
+    return [
+        Tenant("a", designs["a"], device_map=[0, 2],
+               slo=SLO(1e-3, weight=2.0), inputs=_SPECS["a"]),
+        Tenant("b", designs["b"], device_map=[0, 1],
+               slo=SLO(1e-3, weight=1.0), inputs=_SPECS["b"]),
+    ]
+
+
+def test_corun_is_bit_identical_with_exact_conservation(compiled):
+    _, designs, solo = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    server = TenantServer(fabric, _tenants(designs))
+    out = server.run()
+    for n in _SPECS:
+        rec = out.record(n)
+        assert rec.status == "done"
+        assert bit_identical(rec.result.outputs, solo[n].outputs), n
+        assert all(rec.result.report.agreement().values()), n
+    # Both tenants crossed the shared 0->1 link, and every link's per-flow
+    # buckets sum to its total (asserted again inside conservation()).
+    assert any(len(c.flow_bytes) >= 2 for c in server.transport.counters)
+    cons = out.conservation
+    assert cons["exact"]
+    assert sum(cons["per_tenant_link_bytes"].values()) \
+        == cons["total_link_bytes"]
+    assert all(b > 0 for b in cons["per_tenant_link_bytes"].values())
+    # Per-tenant congestion reports are scoped to each flow's bytes.
+    for n in _SPECS:
+        cong = out.record(n).result.report.congestion
+        assert sum(l.bytes for l in cong.links) \
+            == cons["per_tenant_link_bytes"][n]
+        assert cong.kind.endswith(f"flow{out.record(n).flow}")
+
+
+def test_device_kill_drains_readmits_and_spares_the_peer(compiled):
+    graphs, designs, solo = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    server = TenantServer(fabric, _tenants(designs))
+    out = server.run(faults=[DeviceKill(device=2, sweep=2)])
+    killed = out.record("a")
+    assert killed.status == "killed" and killed.killed_at == 2
+    recovered = out.record("a+recovered")
+    assert recovered.status == "done"
+    assert recovered.flow != killed.flow        # fresh incarnation id
+    peer = out.record("b")
+    assert peer.status == "done"
+    assert bit_identical(peer.result.outputs, solo["b"].outputs)
+    binding = bind_programs(graphs["a"], _SPECS["a"])
+    ref = np.asarray(binding.reference())
+    got = np.asarray(recovered.result.outputs)
+    assert np.max(np.abs(got - ref)) <= binding.atol
+    assert out.conservation["exact"]
+
+
+def test_kill_without_readmit_leaves_victim_dead(compiled):
+    _, designs, _ = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    server = TenantServer(fabric, _tenants(designs))
+    out = server.run(faults=[DeviceKill(device=2, sweep=2, readmit=False)])
+    assert out.record("a").status == "killed"
+    assert out.record("a").recovered_as is None
+    assert out.record("b").status == "done"
+    with pytest.raises(KeyError):
+        out.record("a+recovered")
+
+
+def test_recompile_survivor_design_is_first_class(compiled):
+    _, designs, _ = compiled
+    degraded = recompile(designs["a"], 1)
+    assert degraded.cluster.topology.num_devices == 1
+    assert degraded.partition is not None
+    assert set(degraded.partition.assignment.values()) == {0}
+    assert degraded.options.fabric is None
+
+
+def test_duplicate_tenant_names_rejected(compiled):
+    _, designs, _ = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    tenants = _tenants(designs)
+    tenants[1] = dataclasses.replace(tenants[1], name="a")
+    with pytest.raises(ValueError):
+        TenantServer(fabric, tenants)
+
+
+def test_solo_tenant_matches_solo_execution(compiled):
+    """One tenant through the server == the plain executor (flow machinery
+    is invisible when nobody shares)."""
+    _, designs, solo = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    server = TenantServer(fabric, [_tenants(designs)[0]],
+                          net_config=NetConfig())
+    out = server.run()
+    rec = out.record("a")
+    assert rec.status == "done"
+    assert bit_identical(rec.result.outputs, solo["a"].outputs)
+    assert out.conservation["exact"]
