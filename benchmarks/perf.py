@@ -38,6 +38,16 @@ memory-channel delivered bytes); and the hot-bank demo (every reader
 pinned to bank 0) must trigger the memory_feedback re-map and reduce max
 projected bank utilization by ≥ 10×.  All asserted in both modes.
 
+Chaos matrix (the ``chaos`` section, schema v6): the paper apps execute
+through the fabric under seeded fault injection — drop/corrupt/reorder
+tiers, scripted link-down windows, permanent link death with route repair,
+and a mid-run kill restored from a sweep-barrier snapshot.  Every cell
+must be bit-identical to its fault-free baseline with exact goodput
+conservation (the runner raises otherwise); the section records the
+overhead-vs-drop-rate curve and the restore cost in extra sweeps.
+Asserted in both modes (smoke: stencil only; full: all four apps × the
+complete 7-scenario matrix).
+
 Multi-tenant serving (the ``serve`` section, schema v5): two independently
 compiled designs co-run as tenants over ONE shared 4-ring fabric with 2:1
 weighted-fair flow arbitration — each tenant's outputs must be
@@ -490,6 +500,70 @@ def bench_serve(smoke: bool) -> Dict[str, object]:
     }
 
 
+def bench_chaos(smoke: bool) -> Dict[str, object]:
+    """Seeded fault matrix (schema v6 ``chaos``): every cell bit-identical
+    to its fault-free baseline with exact goodput conservation — the
+    runner raises on any broken guarantee, so reaching the return value IS
+    the assertion.  Records the overhead-vs-drop-rate curve and the
+    checkpoint/restore cost (extra sweeps vs the barrier+drain bound)."""
+    from repro.chaos import default_matrix, run_matrix
+    from repro.chaos.runner import DRAIN_SLACK
+
+    scenarios = list(default_matrix())
+    if smoke:
+        keep = {"drop-low", "drop-mid", "drop-high", "kill-restore"}
+        scenarios = [s for s in scenarios if s.name in keep]
+        apps = ("stencil",)
+    else:
+        apps = ("stencil", "cnn", "knn", "pagerank")
+    matrix = run_matrix(apps, scenarios)
+    if not matrix["ok"]:
+        raise AssertionError(f"chaos matrix not ok: {matrix}")
+    cells = matrix["cells"]
+
+    # Overhead-vs-drop-rate curve: the acceptance criterion wants the
+    # sweep overhead *bounded and recorded*, per drop tier across apps.
+    by_name = {sc.name: sc for sc in scenarios}
+    curve = []
+    for name in ("drop-low", "drop-mid", "drop-high"):
+        if name not in by_name:
+            continue
+        tier = [c for c in cells if c["scenario"] == name]
+        curve.append({
+            "scenario": name, "drop": by_name[name].drop,
+            "corrupt": by_name[name].corrupt,
+            "reorder": by_name[name].reorder,
+            "mean_overhead_sweeps":
+                round(sum(c["overhead_sweeps"] for c in tier) / len(tier), 2),
+            "max_overhead_sweeps":
+                max(c["overhead_sweeps"] for c in tier),
+            "retransmit_bytes": sum(c["retransmit_bytes"] for c in tier),
+        })
+    if sum(row["retransmit_bytes"] for row in curve) <= 0:
+        raise AssertionError("drop tiers produced no retransmits — the "
+                             "fault injection never engaged")
+
+    restores = [{"app": c["app"], "scenario": c["scenario"],
+                 "baseline_sweeps": c["baseline_sweeps"],
+                 "restore_sweeps": c["restore_sweeps"],
+                 "restore_extra_sweeps": c["restore_extra_sweeps"]}
+                for c in cells if "restore_extra_sweeps" in c]
+    if not restores:
+        raise AssertionError("chaos matrix ran no kill/restore cell")
+    barrier = max(sc.barrier for sc in scenarios if sc.kill_sweep is not None)
+    return {
+        "ndev": matrix["ndev"],
+        "apps": matrix["apps"],
+        "scenarios": matrix["scenarios"],
+        "cells_ok": len(cells),
+        "bit_identical": True,
+        "overhead_vs_drop": curve,
+        "restore": {"barrier_sweeps": barrier,
+                    "drain_slack_sweeps": DRAIN_SLACK,
+                    "cells": restores},
+    }
+
+
 def bench_kl_refine(nv: int = 256, ndev: int = 8,
                     avg_degree: int = 8) -> Dict[str, object]:
     """Synthetic-graph micro-benchmark of the PR 3 kl_refine rewrite."""
@@ -636,6 +710,18 @@ def main() -> int:
             f"goodput {s['goodput_Bps']:.2e}B/s"
             for n, s in t.items()))
 
+    chaos = bench_chaos(args.smoke)
+    for row in chaos["overhead_vs_drop"]:
+        print(f"[chaos {row['scenario']:>9s} p={row['drop']:.2f}] "
+              f"overhead mean {row['mean_overhead_sweeps']:.2f} / "
+              f"max {row['max_overhead_sweeps']} sweeps, "
+              f"retransmit {row['retransmit_bytes']}B (bit-identical)")
+    for rc in chaos["restore"]["cells"]:
+        print(f"[chaos {rc['scenario']:>9s} {rc['app']:>8s}] restored in "
+              f"+{rc['restore_extra_sweeps']} extra sweeps "
+              f"(barrier {chaos['restore']['barrier_sweeps']} + "
+              f"drain {chaos['restore']['drain_slack_sweeps']})")
+
     kl = bench_kl_refine()
     print(f"[kl_refine {kl['nodes']}n/{kl['ndev']}d] ref {kl['ref_s']}s "
           f"vec {kl['vec_s']}s -> {kl['speedup']}x")
@@ -653,7 +739,7 @@ def main() -> int:
                 f"model build speedup {build['speedup']} below 1.5x floor")
 
     out = {
-        "schema": "bench-compile/v5",
+        "schema": "bench-compile/v6",
         "created_unix": time.time(),
         "mode": "smoke" if args.smoke else "full",
         "configs": records,
@@ -674,6 +760,9 @@ def main() -> int:
         # Multi-tenant serving (repro.tenants): shared-fabric co-run,
         # fault drain, load sweep, isolation invariant.
         "serve": serve,
+        # Chaos matrix (repro.chaos): seeded faults, bit-identity,
+        # goodput conservation, restore cost.
+        "chaos": chaos,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)
@@ -684,7 +773,8 @@ def main() -> int:
           f"conserve per-link bytes; {len(mem_records)} bank-modeled apps "
           f"bit-identical to their Pallas references; 2-tenant shared-"
           f"fabric serve isolated (victim share "
-          f"{iso['victim_share_frac']:.3f}); wrote {args.out}")
+          f"{iso['victim_share_frac']:.3f}); chaos matrix "
+          f"{chaos['cells_ok']} cells bit-identical; wrote {args.out}")
     return 0
 
 

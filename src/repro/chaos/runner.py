@@ -1,0 +1,172 @@
+"""Chaos runner: execute a scenario matrix and *assert* the guarantees.
+
+One cell = (app, scenario).  Each app compiles once per process
+(:func:`compile_app`, memoized) onto a 4-FPGA ring with the full pass
+pipeline and a real fabric; the fault-free baseline run provides the
+bit-identity reference and the sweep floor.  :func:`run_scenario` then:
+
+* runs the scenario's :class:`~repro.net.faults.FaultModel` end to end —
+  outputs must be **bit-identical** to the baseline, every
+  measured-vs-predicted agreement identity (including the repair-aware
+  goodput conservation) must hold, and a same-seed **replay** must land on
+  the identical sweep count and retransmit tally;
+* for kill cells, injects a :class:`~repro.runtime.fault.FailureInjector`
+  death mid-run with sweep-barrier checkpointing on, resumes via
+  :func:`~repro.exec.snapshot.resume_execution`, and bounds the restore
+  cost: total sweeps ≤ baseline + barrier interval + drain slack (the
+  acceptance criterion — a kill costs the sweeps since the barrier, not a
+  re-run).
+
+Everything is deterministic — seeded rngs, no wall clock — so a failing
+cell is replayable from its JSON record alone.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from .scenario import ChaosScenario, default_matrix
+
+#: Sweep slack allowed on top of the barrier interval for a restored run:
+#: the network drain of the recalled segment plus ARQ backoff tails.
+DRAIN_SLACK = 16
+
+_COMPILED: Dict[Tuple[str, int], Tuple[Any, Any]] = {}
+
+
+def compile_app(app: str, ndev: int = 4):
+    """(graph, design) for ``app`` on an ``ndev``-FPGA ring with a real
+    fabric — memoized per process (compilation dominates cell cost)."""
+    key = (app, ndev)
+    if key not in _COMPILED:
+        from ..apps import APPS
+        from ..compiler import CompileOptions, compile as tapa_compile
+        from ..core import fpga_ring_cluster
+        from ..net import cluster_fabric
+        cluster = fpga_ring_cluster(ndev)
+        graph = APPS[app].build_graph(ndev)
+        design = tapa_compile(graph, cluster, CompileOptions(
+            balance_kind="LUT", balance_tol=0.8, exact_limit=1500,
+            fabric=cluster_fabric(cluster),
+            passes=("normalize_units", "partition", "congestion_feedback",
+                    "pipeline_interconnect", "schedule")))
+        _COMPILED[key] = (graph, design)
+    return _COMPILED[key]
+
+
+def _execute(graph, design, *, faults=None, injector=None,
+             checkpoint_dir=None, checkpoint_every=None):
+    from ..exec import bind_programs, execute
+    return execute(design, bind_programs(graph), faults=faults,
+                   injector=injector, checkpoint_dir=checkpoint_dir,
+                   checkpoint_every=checkpoint_every)
+
+
+def _run_kill_cell(graph, design, scenario: ChaosScenario, baseline,
+                   cell: Dict[str, Any]) -> Any:
+    """Kill mid-run, restore from the barrier, bound the extra sweeps."""
+    from ..exec import bind_programs, resume_execution
+    from ..runtime.fault import FailureInjector
+    fm = scenario.fault_model()
+    with tempfile.TemporaryDirectory() as d:
+        injector = FailureInjector(fail_at_steps=[scenario.kill_sweep])
+        try:
+            _execute(graph, design, faults=fm, injector=injector,
+                     checkpoint_dir=d, checkpoint_every=scenario.barrier)
+            raise AssertionError(
+                f"{scenario.name}: run finished before kill sweep "
+                f"{scenario.kill_sweep} — scenario is miscalibrated")
+        except FailureInjector.Injected:
+            pass
+        resumed = resume_execution(design, d,
+                                   binding=bind_programs(graph),
+                                   faults=fm)
+    cell["restore_sweeps"] = resumed.report.sweeps
+    cell["restore_extra_sweeps"] = (resumed.report.sweeps
+                                    - baseline.report.sweeps)
+    # A faulted resume replays losses, so the barrier bound only binds the
+    # clean-link cells; lossy kills still assert identity + agreement.
+    if not scenario.lossy:
+        assert cell["restore_extra_sweeps"] <= scenario.barrier \
+            + DRAIN_SLACK, (
+            f"{scenario.name}: restore cost {cell['restore_extra_sweeps']} "
+            f"sweeps > barrier {scenario.barrier} + drain {DRAIN_SLACK}")
+    return resumed
+
+
+def run_scenario(app: str, scenario: ChaosScenario, *, ndev: int = 4,
+                 baseline=None) -> Dict[str, Any]:
+    """Run one matrix cell; raises AssertionError on any broken guarantee,
+    returns the cell's JSON-ready record otherwise."""
+    from ..tenants import bit_identical
+    graph, design = compile_app(app, ndev)
+    if baseline is None:
+        baseline = _execute(graph, design)
+    cell: Dict[str, Any] = {
+        "app": app, "scenario": scenario.name, "seed": scenario.seed,
+        "baseline_sweeps": baseline.report.sweeps,
+    }
+    fm = scenario.fault_model()
+    if scenario.kill_sweep is not None:
+        result = _run_kill_cell(graph, design, scenario, baseline, cell)
+    else:
+        result = _execute(graph, design, faults=fm)
+        # Determinism: the same seeded scenario replays to the same sweep
+        # count and the same retransmit tally, bit for bit.
+        if fm is not None:
+            replay = _execute(graph, design, faults=fm)
+            assert replay.report.sweeps == result.report.sweeps, \
+                f"{scenario.name}: replay diverged in sweeps"
+            assert (replay.report.net_retransmit_bytes
+                    == result.report.net_retransmit_bytes), \
+                f"{scenario.name}: replay diverged in retransmits"
+            assert bit_identical(replay.outputs, result.outputs), \
+                f"{scenario.name}: replay diverged in outputs"
+    assert bit_identical(result.outputs, baseline.outputs), \
+        f"{scenario.name}: outputs diverged from the fault-free baseline"
+    agree = result.report.agreement()
+    assert all(agree.values()), \
+        f"{scenario.name}: agreement broken: {agree}"
+    cell.update({
+        "sweeps": result.report.sweeps,
+        "overhead_sweeps": result.report.sweeps - baseline.report.sweeps,
+        "retransmit_bytes": result.report.net_retransmit_bytes,
+        "goodput_hop_bytes": result.report.net_goodput_hop_bytes,
+        "bit_identical": True,
+        "agreement": agree,
+        "ok": True,
+    })
+    return cell
+
+
+def run_matrix(apps: Sequence[str] = ("stencil", "cnn", "knn", "pagerank"),
+               scenarios: Optional[Sequence[ChaosScenario]] = None, *,
+               ndev: int = 4, verbose: bool = False) -> Dict[str, Any]:
+    """The full fault matrix: every scenario over every app.
+
+    Returns the matrix record (the CI artifact).  Raises on the first
+    broken guarantee — a chaos matrix that "mostly passes" is a failure.
+    """
+    scenarios = tuple(scenarios if scenarios is not None
+                      else default_matrix())
+    cells = []
+    for app in apps:
+        graph, design = compile_app(app, ndev)
+        baseline = _execute(graph, design)
+        for sc in scenarios:
+            cell = run_scenario(app, sc, ndev=ndev, baseline=baseline)
+            cells.append(cell)
+            if verbose:
+                print(f"  [{app} × {sc.name}] sweeps {cell['sweeps']} "
+                      f"(+{cell['overhead_sweeps']}), retransmit "
+                      f"{cell['retransmit_bytes']}B"
+                      + (f", restore +{cell['restore_extra_sweeps']}"
+                         if "restore_extra_sweeps" in cell else ""))
+    return {
+        "format": "chaos-matrix/v1",
+        "ndev": ndev,
+        "apps": list(apps),
+        "scenarios": [sc.name for sc in scenarios],
+        "cells": cells,
+        "ok": all(c["ok"] for c in cells),
+    }

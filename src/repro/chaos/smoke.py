@@ -1,0 +1,68 @@
+"""Chaos smoke run (CI): the reduced fault matrix on one app.
+
+One drop-rate tier, one finite link outage, one permanent link death
+(route repair), and one kill/restore cell, all on the stencil app over a
+4-FPGA emulated ring.  Every cell asserts bit-identity against the
+fault-free baseline, full measured-vs-predicted agreement (including the
+repair-aware goodput conservation), seeded replayability, and the
+barrier-bounded restore cost.  Writes the fault-matrix JSON artifact.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.chaos.smoke \
+        [--app stencil] [--full] [--out results/chaos_smoke.json]
+
+``--full`` runs the complete :func:`repro.chaos.default_matrix` over all
+four paper apps (the BENCH path; several minutes).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+# ^ MUST precede any jax import: device count locks on first init.
+
+import argparse
+import json
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="stencil",
+                    choices=["stencil", "pagerank", "knn", "cnn"])
+    ap.add_argument("--full", action="store_true",
+                    help="full matrix over all four apps")
+    ap.add_argument("--out", default="results/chaos_smoke.json")
+    args = ap.parse_args()
+
+    import jax
+
+    from .runner import run_matrix
+    from .scenario import ChaosScenario, default_matrix
+
+    print(f"devices: {jax.devices()}")
+    if args.full:
+        apps = ("stencil", "cnn", "knn", "pagerank")
+        scenarios = default_matrix()
+    else:
+        apps = (args.app,)
+        scenarios = (
+            ChaosScenario("drop-mid", drop=0.05, corrupt=0.02,
+                          reorder=0.03, seed=5),
+            ChaosScenario("down-window", down={5: ((0, 6),)}, seed=11),
+            ChaosScenario("link-death", down={5: ((0, None),)},
+                          fail_threshold=4, seed=13),
+            ChaosScenario("kill-restore", kill_sweep=6, barrier=4,
+                          seed=17),
+        )
+    matrix = run_matrix(apps, scenarios, verbose=True)
+    assert matrix["ok"]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(matrix, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+    print(f"CHAOS_SMOKE_OK cells={len(matrix['cells'])} "
+          f"apps={len(matrix['apps'])}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

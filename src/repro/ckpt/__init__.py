@@ -1,3 +1,5 @@
-from .checkpoint import (CheckpointManager, load_checkpoint, save_checkpoint)
+from .checkpoint import (CheckpointManager, latest_step, load_checkpoint,
+                         save_checkpoint)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

@@ -29,11 +29,23 @@ def _flatten(tree) -> Dict[str, Any]:
 
 
 def save_checkpoint(directory: str, step: int, tree, *,
-                    blocking: bool = True) -> threading.Thread:
-    """Write tree to directory/step_<step>; returns writer thread."""
+                    blocking: bool = True,
+                    overwrite: bool = False) -> threading.Thread:
+    """Write tree to directory/step_<step>; returns writer thread.
+
+    A *published* ``step_<N>/`` is immutable by default: saving onto one
+    raises :class:`FileExistsError` unless ``overwrite=True`` — silently
+    clobbering the checkpoint a restart would restore from is exactly the
+    failure mode the atomic-rename layout exists to prevent.  (Leftover
+    ``.tmp`` dirs from a crashed writer are fair game either way.)
+    """
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"step_{step}.tmp")
     final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(final) and not overwrite:
+        raise FileExistsError(
+            f"checkpoint step_{step} already published in {directory!r}; "
+            "pass overwrite=True to replace it")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
@@ -125,8 +137,11 @@ class CheckpointManager:
     def save(self, step: int, tree, blocking: bool = False):
         if self._pending is not None:
             self._pending.join()
+        # The manager owns its directory, and a restarted trainer may
+        # legitimately re-save the step it just restored (same state by
+        # construction) — managed saves replace in place.
         self._pending = save_checkpoint(self.directory, step, tree,
-                                        blocking=blocking)
+                                        blocking=blocking, overwrite=True)
         self._gc()
 
     def wait(self):

@@ -27,11 +27,14 @@ from .executor import (DeadlockError, ExecutionResult, ExecutionState,
 from .programs import (BINDER_REGISTRY, ProgramBinding, RoutedOutput,
                        SOURCE_KEY, bind_programs, register_binder)
 from .report import ChannelTrace, ExecutionReport, MemChannelTrace
+from .snapshot import (latest_snapshot_step, load_snapshot, restore_state,
+                       resume_execution, save_snapshot, snapshot_steps)
 
 __all__ = [
     "BINDER_REGISTRY", "ChannelStats", "ChannelTrace", "DeadlockError",
     "ExecutionReport", "ExecutionResult", "ExecutionState", "FifoChannel",
     "MemChannelTrace", "ProgramBinding", "RoutedOutput", "SOURCE_KEY",
-    "StarvationError", "bind_programs", "execute", "register_binder",
-    "token_bytes",
+    "StarvationError", "bind_programs", "execute", "latest_snapshot_step",
+    "load_snapshot", "register_binder", "restore_state", "resume_execution",
+    "save_snapshot", "snapshot_steps", "token_bytes",
 ]

@@ -162,7 +162,8 @@ class ExecutionState:
                  mem: Any = FROM_DESIGN,
                  transport: Any = None,
                  memsys: Any = None,
-                 device_map: Optional[Sequence[int]] = None):
+                 device_map: Optional[Sequence[int]] = None,
+                 faults: Any = None):
         if design.partition is None:
             raise ValueError("execute() needs a partitioned design "
                              "(run the partition pass)")
@@ -202,7 +203,8 @@ class ExecutionState:
                     raise ValueError(
                         f"fabric spans {fabric.num_devices} devices but the "
                         f"cluster has {design.cluster.num_devices}")
-                transport = FabricTransport(fabric, net_config)
+                transport = FabricTransport(fabric, net_config,
+                                            faults=faults)
         else:
             nfab = transport.fabric.num_devices
             bad = [d for d in self.device_map[:max(1, ndev)] if d >= nfab]
@@ -290,6 +292,11 @@ class ExecutionState:
                 # model).
                 est = _estimate_flit_hops(self.channels, transport)
                 max_sweeps += 256 + 64 * (T + 1) * max(1, est)
+                if getattr(transport, "faults", None) is not None:
+                    # Losses inflate transmissions and backoff spaces the
+                    # retries — budget for it so a lossy-but-progressing
+                    # run is not misdiagnosed as throughput collapse.
+                    max_sweeps += transport.faults.sweep_allowance(est, T)
             if memsys is not None:
                 # Banks serve >= 1 burst per sweep while queued, so the
                 # total burst demand bounds the extra memory-induced sweeps.
@@ -477,12 +484,30 @@ class ExecutionState:
                                report=report)
 
     # -- the classic solo loop -----------------------------------------------
-    def run(self) -> ExecutionResult:
-        """Drive this state to completion, stepping the owned substrate."""
+    def run(self, *, injector: Any = None, start_sweep: int = 0,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: Optional[int] = None) -> ExecutionResult:
+        """Drive this state to completion, stepping the owned substrate.
+
+        ``injector`` (a :class:`~repro.runtime.fault.FailureInjector`) is
+        probed once per sweep — the chaos harness's kill switch.
+        ``checkpoint_dir`` + ``checkpoint_every`` snapshot the full
+        execution state every N sweeps (atomic ``step_<sweep>`` dirs, the
+        repro.ckpt idiom) so :func:`~repro.exec.snapshot.resume_execution`
+        can continue a killed run from the last barrier instead of
+        re-running from scratch.  ``start_sweep`` is that resume entry
+        point: the sweep counter continues where the snapshot stopped (the
+        budget shifts with it, so a restored run keeps its full headroom).
+        """
         transport, memsys = self.transport, self.memsys
+        if checkpoint_every is not None and checkpoint_dir is None:
+            raise ValueError("checkpoint_every needs a checkpoint_dir")
         t_start = time.perf_counter()
-        sweep, done = 0, False
-        while sweep < self.max_sweeps:
+        sweep, done = start_sweep, False
+        budget = self.max_sweeps + start_sweep
+        while sweep < budget:
+            if injector is not None:
+                injector.check(sweep)
             fired_this_sweep = self.advance(sweep)
             if transport is not None and self.owns_transport:
                 for mid, ch_index in transport.step(sweep):
@@ -490,6 +515,10 @@ class ExecutionState:
             if memsys is not None and self.owns_memsys:
                 for rid, ch_index in memsys.step(sweep):
                     self.mem_deliver(ch_index, rid, sweep)
+            if (checkpoint_every is not None
+                    and (sweep + 1 - start_sweep) % checkpoint_every == 0):
+                from .snapshot import save_snapshot   # avoid import cycle
+                save_snapshot(self, sweep, checkpoint_dir)
             done = self.done
             if done:
                 break
@@ -532,7 +561,11 @@ def execute(design: CompiledDesign,
             check_starvation: bool = True,
             fabric: Any = FROM_DESIGN,
             net_config=None,
-            mem: Any = FROM_DESIGN) -> ExecutionResult:
+            mem: Any = FROM_DESIGN,
+            faults: Any = None,
+            injector: Any = None,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: Optional[int] = None) -> ExecutionResult:
     """Run ``design`` as a multi-device dataflow program.
 
     ``binding`` defaults to the app hook resolved from the graph's name
@@ -546,9 +579,17 @@ def execute(design: CompiledDesign,
     ``mem`` defaults to the design's bank model (``CompileOptions.mem``);
     pass ``mem=None`` to force the ideal memory path or a
     :class:`~repro.mem.banks.MemConfig` to override.
+
+    Chaos knobs (:mod:`repro.chaos`): ``faults`` is a
+    :class:`~repro.net.faults.FaultModel` switching the fabric transport
+    into lossy-link + ARQ + route-repair mode (``None`` keeps every path
+    byte-identical); ``injector`` / ``checkpoint_dir`` /
+    ``checkpoint_every`` are forwarded to :meth:`ExecutionState.run`.
     """
     return ExecutionState(
         design, binding, inputs=inputs, devices=devices,
         max_sweeps=max_sweeps, starve_limit=starve_limit,
         check_starvation=check_starvation, fabric=fabric,
-        net_config=net_config, mem=mem).run()
+        net_config=net_config, mem=mem, faults=faults).run(
+            injector=injector, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every)

@@ -123,6 +123,13 @@ class ExecutionReport:
     congestion: Optional[Any] = None           # net.CongestionReport
     congestion_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
     measured_route_comm_cost: float = 0.0      # per-link Eq. 2 over the cut
+    # Fault-mode accounting (repro.chaos; None when faults were off).
+    # Under route repair a message may deliver over a different route than
+    # it was submitted on, so the conservation right-hand side is the
+    # transport's delivered-bytes × hops-at-delivery tally, not the static
+    # per-channel route length.
+    net_goodput_hop_bytes: Optional[int] = None
+    net_retransmit_bytes: int = 0
     # HBM bank model (None/empty on the ideal memory path).
     mem_contention: Optional[Any] = None       # mem.MemContentionReport
     mem_channels: List[MemChannelTrace] = dataclasses.field(
@@ -196,9 +203,13 @@ class ExecutionReport:
         if self.used_fabric:
             out["net_delivery_match"] = all(
                 c.net_bytes == c.net_delivered_bytes for c in self.channels)
+            # Under faults the identity is goodput-based (see field doc) —
+            # still exact; without faults the two sides are the same number.
+            rhs = (self.net_goodput_hop_bytes
+                   if self.net_goodput_hop_bytes is not None
+                   else self.net_hop_weighted_bytes)
             out["link_conservation"] = math.isclose(
-                self.net_link_bytes, float(self.net_hop_weighted_bytes),
-                rel_tol=0.0, abs_tol=0.0)
+                self.net_link_bytes, float(rhs), rel_tol=0.0, abs_tol=0.0)
         if self.mem_channels:
             out["mem_delivery_match"] = all(
                 c.issued == c.consumed == c.count
@@ -251,6 +262,9 @@ class ExecutionReport:
                 "congestion_waits": dict(self.congestion_waits),
                 **self.congestion.summary(),
             }
+            if self.net_goodput_hop_bytes is not None:
+                out["net"]["goodput_hop_bytes"] = self.net_goodput_hop_bytes
+                out["net"]["retransmit_bytes"] = self.net_retransmit_bytes
         if self.mem_channels or self.used_mem:
             out["mem"] = {
                 "requested_bytes": self.mem_requested_bytes,
@@ -319,12 +333,18 @@ def build_report(*, design, channels: Sequence[FifoChannel],
                 route_cost += fabric.route_cost(
                     fc.net_src_dev, fc.net_dst_dev, gch.width_bits)
     congestion = None
+    goodput_hop = None
+    retransmit = 0
     if transport is not None:
         from ..net.congestion import measure   # deferred: optional layer
         # A tenant's flow-scoped transport view reports only its own
         # traffic, so the link-conservation identity stays per-tenant.
-        congestion = measure(getattr(transport, "inner", transport),
-                             flow=getattr(transport, "flow", None))
+        inner = getattr(transport, "inner", transport)
+        flow = getattr(transport, "flow", None)
+        congestion = measure(inner, flow=flow)
+        if flow is None and getattr(inner, "faults", None) is not None:
+            goodput_hop = inner.goodput_hop_bytes_total()
+            retransmit = sum(c.retransmit_bytes for c in inner.counters)
     mem_contention = None
     if memsys is not None:
         from ..mem.contention import measure as _mem_measure
@@ -360,6 +380,8 @@ def build_report(*, design, channels: Sequence[FifoChannel],
         congestion=congestion,
         congestion_waits=dict(congestion_waits or {}),
         measured_route_comm_cost=route_cost,
+        net_goodput_hop_bytes=goodput_hop,
+        net_retransmit_bytes=retransmit,
         mem_contention=mem_contention,
         mem_channels=mem_traces,
         mem_waits=dict(mem_waits or {}))

@@ -13,7 +13,11 @@ Sits between the compiler and the executor:
   analytically from a partition);
 * :mod:`~repro.net.calibrate` feeds measurements back into the compiler:
   per-link Eq. 2 re-evaluation, calibrated pair costs, and the registered
-  ``congestion_feedback`` pass that repartitions around hotspots.
+  ``congestion_feedback`` pass that repartitions around hotspots;
+* :mod:`~repro.net.faults` models lossy links (seeded drop / corrupt /
+  reorder, scripted down windows, link death) for the ``repro.chaos``
+  layer — the transport's ARQ + route repair keeps results bit-identical
+  under every fault the model can inject.
 
 Quickstart (compile → execute through the fabric → congestion report)::
 
@@ -35,11 +39,13 @@ from .calibrate import (calibrated_pair_cost, congestion_feedback_pass,
                         lambda_crosscheck, route_comm_cost)
 from .congestion import CongestionReport, LinkUsage, measure, project
 from .fabric import Fabric, Link, SHARED, build_fabric, cluster_fabric
+from .faults import FaultModel, LinkFaults, PartitionedFabricError
 from .transport import FabricTransport, LinkCounters, NetConfig
 
 __all__ = [
-    "CongestionReport", "Fabric", "FabricTransport", "Link", "LinkCounters",
-    "LinkUsage", "NetConfig", "SHARED", "build_fabric",
+    "CongestionReport", "Fabric", "FabricTransport", "FaultModel", "Link",
+    "LinkCounters", "LinkFaults", "LinkUsage", "NetConfig",
+    "PartitionedFabricError", "SHARED", "build_fabric",
     "calibrated_pair_cost", "cluster_fabric", "congestion_feedback_pass",
     "lambda_crosscheck", "measure", "project", "route_comm_cost",
 ]

@@ -39,7 +39,7 @@ class LinkUsage:
     index: int
     name: str                      # "src->dst" or "bus"
     protocol: str
-    bytes: float                   # payload bytes crossing the link
+    bytes: float                   # goodput bytes crossing the link
     utilization: float             # fraction of the link's capacity used
     flits: int = 0                 # measured only
     busy_sweeps: int = 0           # measured only
@@ -47,6 +47,13 @@ class LinkUsage:
     escape_moves: int = 0          # measured only (credit-cycle escapes)
     peak_queue: int = 0            # measured only (ingress flit HWM)
     channels: int = 0              # projected only: cut channels routed here
+    # Fault/ARQ accounting (repro.chaos; all zero without a FaultModel).
+    retransmit_bytes: int = 0      # wasted wire bytes (failed + recalled)
+    retransmit_flits: int = 0
+    drops: int = 0                 # frames lost on the wire
+    crc_errors: int = 0            # frames rejected by the receiver CRC
+    down_losses: int = 0           # attempts into a scripted down window
+    arq_stalls: int = 0            # transmissions refused: ARQ window full
 
     def to_json(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
@@ -74,13 +81,24 @@ class CongestionReport:
         return self.links[index]
 
     def summary(self) -> Dict[str, object]:
-        return {
+        out = {
             "kind": self.kind,
             "sweeps": self.sweeps,
             "total_link_bytes": self.total_bytes,
             "max_utilization": self.max_utilization,
             "links": [l.to_json() for l in self.links],
         }
+        retx = sum(l.retransmit_bytes for l in self.links)
+        if retx or any(l.drops or l.crc_errors or l.down_losses
+                       for l in self.links):
+            # Lossy-run aggregates (repro.chaos) — goodput vs wasted wire.
+            out["retransmit_bytes"] = retx
+            out["retransmit_flits"] = sum(l.retransmit_flits
+                                          for l in self.links)
+            out["drops"] = sum(l.drops for l in self.links)
+            out["crc_errors"] = sum(l.crc_errors for l in self.links)
+            out["down_losses"] = sum(l.down_losses for l in self.links)
+        return out
 
 
 def measure(transport: FabricTransport,
@@ -100,7 +118,11 @@ def measure(transport: FabricTransport,
             bytes=float(c.bytes), utilization=transport.utilization(l.index),
             flits=c.flits, busy_sweeps=c.busy_sweeps,
             stalled_flits=c.stalled_flits, escape_moves=c.escape_moves,
-            peak_queue=c.peak_queue)
+            peak_queue=c.peak_queue,
+            retransmit_bytes=c.retransmit_bytes,
+            retransmit_flits=c.retransmit_flits, drops=c.drops,
+            crc_errors=c.crc_errors, down_losses=c.down_losses,
+            arq_stalls=c.arq_stalls)
             for l, c in zip(transport.fabric.links, counters)]
     else:
         links = [LinkUsage(

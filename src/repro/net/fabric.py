@@ -31,7 +31,7 @@ Clusters with node grouping (paper §5.7) assign the slower
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from ..core.topology import (Cluster, ETHERNET_100G, Protocol, Topology,
                              lam)
@@ -76,12 +76,21 @@ class Fabric:
         # device -> [(neighbor, link_index)] in sorted-neighbor order.
         self._adjacency = adjacency
         self._routes: Dict[int, List[Optional[Tuple[int, ...]]]] = {}
+        # Dead-link-avoiding tables, memoized by (src, frozen dead set) —
+        # route repair (repro.chaos) re-sweeps the same deterministic BFS
+        # with the dead links masked out of the adjacency.
+        self._avoid_routes: Dict[Tuple[int, FrozenSet[int]],
+                                 List[Optional[Tuple[int, ...]]]] = {}
         self._shared_link = next((l.index for l in self.links if l.shared),
                                  None)
 
     # -- routing ------------------------------------------------------------
-    def _sweep(self, src: int) -> List[Optional[Tuple[int, ...]]]:
-        """BFS from ``src``; returns per-destination link-id routes."""
+    def _sweep(self, src: int, avoid: FrozenSet[int] = frozenset()
+               ) -> List[Optional[Tuple[int, ...]]]:
+        """BFS from ``src``; returns per-destination link-id routes.
+        ``avoid`` masks links out of the adjacency (dead-link repair) —
+        neighbor expansion order is unchanged, so repaired routes keep the
+        same sorted-neighbor determinism as the healthy tables."""
         routes: List[Optional[Tuple[int, ...]]] = [None] * self.num_devices
         routes[src] = ()
         frontier = [src]
@@ -90,6 +99,8 @@ class Fabric:
             for u in frontier:
                 base = routes[u]
                 for v, li in self._adjacency.get(u, ()):
+                    if li in avoid:
+                        continue
                     if routes[v] is None:
                         routes[v] = base + (li,)
                         nxt.append(v)
@@ -109,6 +120,30 @@ class Fabric:
         if r is None:
             raise ValueError(f"no route {i}->{j}: fabric is disconnected")
         return r
+
+    def route_avoiding(self, i: int, j: int, dead: FrozenSet[int]
+                       ) -> Optional[Tuple[int, ...]]:
+        """Shortest ``i``→``j`` route that uses no link in ``dead``.
+
+        ``None`` means the survivors leave the pair disconnected — the
+        caller (the transport's route repair) turns that into a
+        :class:`~repro.net.faults.PartitionedFabricError` instead of
+        hanging.  Same BFS determinism as :meth:`route`; an empty ``dead``
+        set reproduces :meth:`route` exactly (memoized separately so the
+        healthy tables stay untouched).
+        """
+        if not dead:
+            return self.route(i, j)
+        self.topology.check(i, j)
+        if i == j:
+            return ()
+        if self._shared_link is not None:
+            return None if self._shared_link in dead \
+                else (self._shared_link,)
+        key = (i, frozenset(dead))
+        if key not in self._avoid_routes:
+            self._avoid_routes[key] = self._sweep(i, avoid=key[1])
+        return self._avoid_routes[key][j]
 
     def hops(self, i: int, j: int) -> int:
         return len(self.route(i, j))

@@ -15,6 +15,8 @@ import logging
 import time
 from typing import Callable, List, Optional
 
+import numpy as np
+
 log = logging.getLogger("repro.runtime")
 
 
@@ -66,16 +68,50 @@ class StragglerMonitor:
         return slow
 
 
+def backoff_delay(attempt: int, *, base_s: float, cap_s: float = 30.0,
+                  jitter: float = 0.1,
+                  rng: Optional[np.random.Generator] = None) -> float:
+    """Capped exponential backoff for restart ``attempt`` (1-based).
+
+    ``min(cap_s, base_s × 2^(attempt-1))``, spread by ``± jitter`` fraction
+    drawn from ``rng`` (seeded — the schedule is reproducible; ``jitter=0``
+    or ``rng=None`` keeps it exact).  A fleet restarting in lockstep after
+    a shared fault re-herds onto the checkpoint store; the jitter is what
+    de-synchronizes the thundering herd.
+    """
+    if attempt < 1:
+        raise ValueError("attempt is 1-based")
+    delay = min(cap_s, base_s * (2.0 ** min(attempt - 1, 62)))
+    if jitter and rng is not None:
+        delay *= 1.0 + jitter * float(rng.uniform(-1.0, 1.0))
+    return max(0.0, delay)
+
+
 def run_with_restarts(make_and_run: Callable[[int], int], *,
                       max_restarts: int = 5,
-                      backoff_s: float = 0.0) -> int:
+                      backoff_s: float = 0.0,
+                      backoff_cap_s: float = 30.0,
+                      jitter: float = 0.1,
+                      seed: int = 0,
+                      sleep: Callable[[float], None] = time.sleep,
+                      rng: Optional[np.random.Generator] = None) -> int:
     """Supervisor: call ``make_and_run(attempt)`` (which restores from the
     latest checkpoint internally) until it completes or restarts exhaust.
 
     Returns the final step reached.  This is the single-process stand-in for
     the fleet-level supervisor (GKE/Borg restart policy); the contract —
     restore-from-latest on every entry — is identical.
+
+    Restart pacing is capped exponential backoff with seeded jitter:
+    attempt ``n`` waits :func:`backoff_delay` seconds (``backoff_s`` base,
+    doubling, capped at ``backoff_cap_s``, ``± jitter`` from
+    ``np.random.default_rng(seed)``).  ``backoff_s=0`` (the default)
+    disables waiting entirely — no ``sleep`` call is made, preserving the
+    legacy hot-restart behaviour.  ``sleep`` and ``rng`` are injectable so
+    tests assert the schedule without real wall time.
     """
+    if rng is None:
+        rng = np.random.default_rng(seed)
     attempt = 0
     while True:
         try:
@@ -87,4 +123,6 @@ def run_with_restarts(make_and_run: Callable[[int], int], *,
                     f"exhausted {max_restarts} restarts") from e
             log.warning("restart %d after: %s", attempt, e)
             if backoff_s:
-                time.sleep(backoff_s)
+                sleep(backoff_delay(attempt, base_s=backoff_s,
+                                    cap_s=backoff_cap_s, jitter=jitter,
+                                    rng=rng))

@@ -30,7 +30,8 @@ Two fidelity levels, deliberately split:
 ``python -m repro.tenants.smoke`` is the CI entry point: 2 tenants on 4
 emulated devices, one injected device kill, re-admission on survivors.
 """
-from .recover import recompile, shrink_cluster
+from .recover import (RecoveryPlan, plan_recovery, recompile,
+                      shrink_cluster)
 from .server import (DeviceKill, FlowMemory, FlowTransport, ServeOutcome,
                      Tenant, TenantRecord, TenantServer, bit_identical)
 from .simulate import (SimResult, TenantLoad, TenantStats, fair_share,
@@ -41,8 +42,8 @@ from .traffic import Request, TrafficConfig, generate, merge, offered_load
 __all__ = [
     "ADMIT", "AdmissionController", "DeviceKill", "FlowMemory",
     "FlowTransport", "QUEUE", "REJECT", "Request", "SLO", "ServeOutcome",
-    "SimResult", "Tenant", "TenantLoad", "TenantRecord", "TenantServer",
-    "TenantStats", "bit_identical", "fair_share", "generate",
-    "isolation_check", "load_sweep", "merge", "offered_load", "recompile",
-    "shrink_cluster", "simulate",
+    "RecoveryPlan", "SimResult", "Tenant", "TenantLoad", "TenantRecord",
+    "TenantServer", "TenantStats", "bit_identical", "fair_share",
+    "generate", "isolation_check", "load_sweep", "merge", "offered_load",
+    "plan_recovery", "recompile", "shrink_cluster", "simulate",
 ]

@@ -29,9 +29,14 @@ Fault story (``repro.runtime.fault``): :class:`DeviceKill` schedules a
 injected failure kills every tenant whose map uses the dead fabric device
 — its in-flight flits and bank requests are cancelled (credits released,
 peers' queues untouched), its state discarded.  With ``readmit=True`` the
-victim is immediately re-compiled onto its surviving devices
-(:func:`repro.tenants.recover.recompile`) and re-admitted under a fresh
-flow id, finishing the run on the degraded placement.
+victim is re-admitted under a fresh flow id via
+:func:`repro.tenants.recover.plan_recovery`: a *transient* kill
+(``DeviceKill.transient=True`` — the process died, the device returns) of
+a tenant that was checkpointing (``Tenant.checkpoint_dir`` +
+``run(checkpoint_every=...)``) **restores** the same design from its last
+sweep barrier, costing only the sweeps since the barrier; a permanent
+device loss re-compiles onto the survivors and re-runs.  Either way the
+incarnations' accounting never mixes.
 """
 from __future__ import annotations
 
@@ -122,6 +127,7 @@ class Tenant:
     make_binding: Optional[Callable[[], Any]] = None
     inputs: Optional[Mapping[str, Any]] = None
     arrival_sweep: int = 0
+    checkpoint_dir: Optional[str] = None   # sweep-barrier snapshots land here
 
     def binding(self):
         if self.make_binding is not None:
@@ -134,11 +140,18 @@ class Tenant:
 class DeviceKill:
     """Kill fabric device ``device`` at ``sweep`` (injected via
     :class:`~repro.runtime.fault.FailureInjector`); optionally re-compile
-    the victims onto their surviving devices and re-admit them."""
+    the victims onto their surviving devices and re-admit them.
+
+    ``transient=True`` means the device itself comes back (a process
+    crash, not a hardware loss): victims still lose all in-flight work,
+    but :func:`~repro.tenants.recover.plan_recovery` may restore them from
+    a sweep-barrier snapshot onto the *same* placement instead of
+    recompiling onto survivors."""
 
     device: int
     sweep: int
     readmit: bool = True
+    transient: bool = False
 
 
 @dataclasses.dataclass
@@ -155,6 +168,8 @@ class TenantRecord:
     result: Optional[ExecutionResult] = None
     killed_at: Optional[int] = None
     recovered_as: Optional[str] = None
+    recovered_via: Optional[str] = None    # "restore" | "recompile" (set on
+                                           # the *reborn* incarnation)
 
 
 @dataclasses.dataclass
@@ -281,25 +296,50 @@ class TenantServer:
 
     def _readmit(self, victim: TenantRecord, kill: DeviceKill,
                  sweep: int) -> TenantRecord:
-        """Re-compile the victim onto its surviving devices, re-admit it
-        under a fresh flow id (accounting of the two incarnations must not
-        mix — each flow's conservation identity stays exact)."""
-        from .recover import recompile
-        survivors = [d for d in victim.tenant.device_map
-                     if d != kill.device]
-        if not survivors:
+        """Re-admit the victim under a fresh flow id (accounting of the
+        two incarnations must not mix — each flow's conservation identity
+        stays exact).  :func:`~repro.tenants.recover.plan_recovery` picks
+        the cheap path: restore the same design from its last sweep
+        barrier when the kill is transient and a snapshot exists, else
+        re-compile onto the surviving devices."""
+        from .recover import plan_recovery, recompile
+        dead = set() if kill.transient else {kill.device}
+        plan = plan_recovery(victim.tenant.device_map, dead,
+                             checkpoint_dir=victim.tenant.checkpoint_dir)
+        if plan.action == "restore":
+            from ..exec.snapshot import load_snapshot, restore_state
+            reborn = dataclasses.replace(
+                victim.tenant, name=f"{victim.name}+recovered")
+            rec = self._admit(reborn, start_sweep=sweep,
+                              recovered_from=victim)
+            restore_state(rec.state, load_snapshot(
+                victim.tenant.checkpoint_dir, plan.step))
+            rec.recovered_via = "restore"
+            return rec
+        if plan.ndev == 0:
             raise DeadlockError(
                 f"tenant {victim.name}: no surviving devices to re-admit on")
-        new_design = recompile(victim.tenant.design, len(survivors))
+        # Transient kill without a usable snapshot: the device returns, so
+        # the original placement (and design) still fits — re-run from
+        # scratch rather than shrinking.
+        survivors = [d for d in victim.tenant.device_map
+                     if kill.transient or d != kill.device]
+        new_design = (victim.tenant.design
+                      if len(survivors) == len(victim.tenant.device_map)
+                      else recompile(victim.tenant.design, plan.ndev))
         reborn = dataclasses.replace(
             victim.tenant, name=f"{victim.name}+recovered",
-            design=new_design, device_map=survivors)
-        return self._admit(reborn, start_sweep=sweep,
-                           recovered_from=victim)
+            design=new_design, device_map=survivors,
+            checkpoint_dir=None)   # old snapshots are of the old placement
+        rec = self._admit(reborn, start_sweep=sweep,
+                          recovered_from=victim)
+        rec.recovered_via = "recompile"
+        return rec
 
     # -- the shared sweep loop -----------------------------------------------
     def run(self, *, faults: Sequence[DeviceKill] = (),
-            max_sweeps: Optional[int] = None) -> ServeOutcome:
+            max_sweeps: Optional[int] = None,
+            checkpoint_every: Optional[int] = None) -> ServeOutcome:
         injector = FailureInjector(
             fail_at_steps=[k.sweep for k in faults])
         kills = {k.sweep: k for k in faults}
@@ -343,6 +383,15 @@ class TenantServer:
                     rec = self.records[i]
                     if rec.state is not None:
                         rec.state.mem_deliver(local, rid, sweep)
+            if checkpoint_every is not None \
+                    and (sweep + 1) % checkpoint_every == 0:
+                from ..exec.snapshot import save_snapshot
+                for rec in self.records:
+                    if (rec.status == "running" and rec.state is not None
+                            and rec.tenant.checkpoint_dir is not None
+                            and sweep >= rec.start_sweep):
+                        save_snapshot(rec.state, sweep,
+                                      rec.tenant.checkpoint_dir)
             running = [r for r in self.records if r.status == "running"]
             if not running:
                 break

@@ -1,0 +1,342 @@
+"""repro.chaos — lossy links, ARQ, route repair, checkpoint/restore.
+
+The robustness acceptance tests, bottom-up: the fault model's determinism
+contract; the transport's reliable-delivery layer (CRC rejection, ARQ
+window backpressure, retransmission with capped backoff) keeping delivery
+exact under seeded loss; link death triggering route repair (or a named
+:class:`PartitionedFabricError` when no route survives); sweep-barrier
+snapshots restoring a killed execution bit-identically; and the scenario
+matrix tying it together end to end (full matrix is ``-m slow``; a
+single-app slice runs in tier 1).
+"""
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosScenario, compile_app, default_matrix, \
+    run_scenario
+from repro.core import DaisyChain, Ring
+from repro.core.topology import ETHERNET_100G
+from repro.exec import (bind_programs, execute, latest_snapshot_step,
+                        load_snapshot, restore_state, resume_execution,
+                        save_snapshot, snapshot_steps)
+from repro.exec.executor import ExecutionState
+from repro.net import (FabricTransport, FaultModel, LinkFaults, NetConfig,
+                       PartitionedFabricError, build_fabric)
+from repro.net.faults import corrupt_frame, flit_crc, flit_payload
+from repro.runtime.fault import FailureInjector
+from repro.tenants import bit_identical
+
+
+def _cfg(budget_flits=2, mtu=64, credits=4):
+    bw = ETHERNET_100G.bandwidth_Bps
+    return NetConfig(mtu_bytes=mtu, link_credits=credits,
+                     sweep_time_s=(budget_flits * mtu) / bw)
+
+
+def _drain(tr, start=0):
+    done, s = [], start
+    while tr.active:
+        done.extend(tr.step(s))
+        s += 1
+        assert s < 10_000, "transport failed to make progress"
+    return done, s
+
+
+_PAYLOADS = [(0, 2, 1234), (1, 3, 999), (3, 0, 100), (2, 1, 4001)]
+
+
+def _run_lossy(faults, payloads=_PAYLOADS, topo=None):
+    fab = build_fabric(topo or Ring(4))
+    tr = FabricTransport(fab, _cfg(), faults=faults)
+    for ch, (s, d, n) in enumerate(payloads):
+        tr.submit(ch, s, d, n, 0)
+    done, sweeps = _drain(tr)
+    return tr, done, sweeps
+
+
+# ---------------------------------------------------------------------------
+# Fault model: validation + determinism contract.
+# ---------------------------------------------------------------------------
+
+def test_fault_probabilities_validated():
+    with pytest.raises(ValueError):
+        LinkFaults(drop=1.5)
+    with pytest.raises(ValueError):
+        LinkFaults(drop=0.6, corrupt=0.5)     # sum > 1
+    with pytest.raises(ValueError):
+        FaultModel(backoff_base=0)
+    with pytest.raises(ValueError):
+        FaultModel(arq_window=0)
+    with pytest.raises(ValueError):
+        FaultModel(fail_threshold=0)
+
+
+def test_down_windows_and_lossy_flag():
+    lf = LinkFaults(down=((3, 7), (20, None)))
+    assert lf.lossy
+    assert lf.up(2) and not lf.up(3) and not lf.up(6) and lf.up(7)
+    assert not lf.up(100)                     # end=None: never comes back
+    assert not LinkFaults().lossy
+
+
+def test_per_link_rng_streams_are_independent_and_replayable():
+    fm = FaultModel(seed=42)
+    a1 = fm.rng(0).random(8)
+    a2 = fm.rng(0).random(8)
+    b = fm.rng(1).random(8)
+    np.testing.assert_array_equal(a1, a2)     # same link: same stream
+    assert not np.array_equal(a1, b)          # different link: different
+
+
+def test_crc_catches_every_single_byte_corruption():
+    payload = flit_payload(mid=7, flit_index=3, nbytes=4096)
+    rng = np.random.default_rng(0)
+    for _ in range(64):
+        bad = corrupt_frame(payload, rng)
+        assert bad != payload
+        assert flit_crc(bad) != flit_crc(payload)
+
+
+# ---------------------------------------------------------------------------
+# Reliable delivery: exact books under seeded loss.
+# ---------------------------------------------------------------------------
+
+def test_lossy_delivery_is_exact_and_conserving():
+    fm = FaultModel(seed=7, default=LinkFaults(drop=0.2, corrupt=0.1,
+                                               reorder=0.1))
+    tr, done, _ = _run_lossy(fm)
+    assert len(done) == len(_PAYLOADS)        # every message delivered
+    assert tr.total_delivered_bytes == sum(n for _, _, n in _PAYLOADS)
+    # Link bytes count useful crossings only; wasted wire time lives in
+    # the separate retransmit ledger — goodput conservation stays exact.
+    assert sum(c.bytes for c in tr.counters) \
+        == tr.goodput_hop_bytes_total()
+    assert sum(c.retransmit_bytes for c in tr.counters) > 0
+    assert sum(c.drops + c.crc_errors for c in tr.counters) > 0
+    assert tr.arq_books_closed()
+
+
+def test_same_seed_replays_exactly_different_seed_differs():
+    def books(seed):
+        fm = FaultModel(seed=seed,
+                        default=LinkFaults(drop=0.15, corrupt=0.05))
+        tr, done, sweeps = _run_lossy(fm)
+        return (sweeps, tuple(done),
+                tuple((c.bytes, c.retransmit_bytes, c.drops, c.crc_errors)
+                      for c in tr.counters))
+    assert books(7) == books(7)
+    assert books(7) != books(8)
+
+
+def test_clean_links_consume_no_rng_and_match_legacy():
+    """A FaultModel with zero probabilities must not perturb scheduling:
+    same sweeps, same per-link bytes as the faults=None path."""
+    base, done0, sweeps0 = _run_lossy(None)
+    fm = FaultModel(seed=123)                  # all-zero probabilities
+    tr, done1, sweeps1 = _run_lossy(fm)
+    assert (sweeps0, done0) == (sweeps1, done1)
+    assert [c.bytes for c in base.counters] \
+        == [c.bytes for c in tr.counters]
+    assert sum(c.retransmit_bytes for c in tr.counters) == 0
+
+
+def test_arq_window_backpressures_but_delivers():
+    # Everything funnels over DaisyChain(2)'s single link pair: one lost
+    # flit keeps its seq un-acked through the backoff, so the peers' new
+    # transmissions hit the window-of-1 and stall.
+    fm = FaultModel(seed=7, default=LinkFaults(drop=0.3), arq_window=1,
+                    backoff_base=2, backoff_cap=4)
+    payloads = [(0, 1, 640), (0, 1, 640), (0, 1, 640), (1, 0, 640)]
+    tr, done, _ = _run_lossy(fm, payloads=payloads, topo=DaisyChain(2))
+    assert len(done) == len(payloads)
+    assert sum(c.arq_stalls for c in tr.counters) > 0
+    assert sum(c.bytes for c in tr.counters) \
+        == tr.goodput_hop_bytes_total()
+    assert tr.arq_books_closed()
+
+
+def test_down_window_stalls_then_recovers():
+    # Every link dark for sweeps [1, 9): traffic stalls, then completes.
+    fm = FaultModel(seed=0, fail_threshold=None,
+                    default=LinkFaults(down=((1, 9),)))
+    tr, done, sweeps = _run_lossy(fm)
+    assert len(done) == len(_PAYLOADS)
+    assert sweeps > 9                          # genuinely rode out the dark
+    assert sum(c.down_losses for c in tr.counters) > 0
+    assert tr.arq_books_closed()
+
+
+# ---------------------------------------------------------------------------
+# Link death -> route repair -> (if cut) PartitionedFabricError.
+# ---------------------------------------------------------------------------
+
+def test_permanent_outage_kills_link_and_reroutes():
+    fm = FaultModel(seed=0, fail_threshold=3,
+                    links={0: LinkFaults(down=((2, None),))})
+    tr, done, _ = _run_lossy(fm)
+    assert len(done) == len(_PAYLOADS)
+    assert 0 in tr.dead_links                  # the cable died...
+    assert tr.reroutes >= 1                    # ...and traffic went around
+    assert tr.total_delivered_bytes == sum(n for _, _, n in _PAYLOADS)
+    # Repair-aware conservation: recalled crossings were reclassified
+    # goodput -> retransmit, so the identity holds mid-repair too.
+    assert sum(c.bytes for c in tr.counters) \
+        == tr.goodput_hop_bytes_total()
+    assert tr.arq_books_closed()
+
+
+def test_partition_raises_named_error():
+    # DaisyChain(4): killing the middle cable cuts {0,1} from {2,3}.
+    fab = build_fabric(DaisyChain(4))
+    middle = [li for li, l in enumerate(fab.links)
+              if {l.src, l.dst} == {1, 2}]
+    fm = FaultModel(seed=0, fail_threshold=2,
+                    links={li: LinkFaults(down=((0, None),))
+                           for li in middle})
+    tr = FabricTransport(fab, _cfg(), faults=fm)
+    tr.submit(0, 0, 3, 500, 0)
+    with pytest.raises(PartitionedFabricError) as ei:
+        _drain(tr)
+    assert ei.value.src in (0, 1) and ei.value.dst in (2, 3)
+    assert set(ei.value.dead_links) == set(middle)
+    assert tr.partition_error is ei.value
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: compiled app through a lossy fabric (bit-identity).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stencil4():
+    graph, design = compile_app("stencil", 4)
+    baseline = execute(design, bind_programs(graph))
+    return graph, design, baseline
+
+
+def test_lossy_run_is_bit_identical_with_agreement(stencil4):
+    graph, design, baseline = stencil4
+    fm = FaultModel(seed=11, default=LinkFaults(drop=0.05, corrupt=0.02,
+                                                reorder=0.03))
+    result = execute(design, bind_programs(graph), faults=fm)
+    assert bit_identical(result.outputs, baseline.outputs)
+    assert all(result.report.agreement().values())
+    assert result.report.sweeps >= baseline.report.sweeps
+    assert result.report.net_goodput_hop_bytes is not None
+
+
+def test_faults_none_report_has_no_fault_fields(stencil4):
+    _, _, baseline = stencil4
+    assert baseline.report.net_goodput_hop_bytes is None
+    assert baseline.report.net_retransmit_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Sweep-barrier snapshots: atomic publish, kill, restore.
+# ---------------------------------------------------------------------------
+
+def test_snapshot_kill_restore_is_bit_identical(stencil4):
+    graph, design, baseline = stencil4
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FailureInjector.Injected):
+            execute(design, bind_programs(graph),
+                    injector=FailureInjector(fail_at_steps=[5]),
+                    checkpoint_dir=d, checkpoint_every=3)
+        steps = snapshot_steps(d)
+        assert steps and steps[-1] < 5         # barriers predate the kill
+        resumed = resume_execution(design, d, binding=bind_programs(graph))
+        assert bit_identical(resumed.outputs, baseline.outputs)
+        assert all(resumed.report.agreement().values())
+        # The kill cost sweeps-since-barrier, not a re-run.
+        assert resumed.report.sweeps - baseline.report.sweeps <= 3 + 16
+
+
+def test_snapshot_publish_is_atomic_and_tmp_ignored(stencil4):
+    graph, design, _ = stencil4
+    state = ExecutionState(design, bind_programs(graph))
+    with tempfile.TemporaryDirectory() as d:
+        path = save_snapshot(state, 0, d)
+        assert os.path.isdir(path) and not path.endswith(".tmp")
+        # Crashed-writer leftovers are never listed as restorable.
+        os.makedirs(os.path.join(d, "step_9.tmp"))
+        assert snapshot_steps(d) == [0]
+        assert latest_snapshot_step(d) == 0
+        # Re-saving the same barrier keeps the published dir (deterministic
+        # content): no error, same path.
+        assert save_snapshot(state, 0, d) == path
+
+
+def test_restore_rejects_mismatched_design(stencil4):
+    graph, design, _ = stencil4
+    state = ExecutionState(design, bind_programs(graph))
+    with tempfile.TemporaryDirectory() as d:
+        save_snapshot(state, 2, d)
+        payload = load_snapshot(d, 2)
+        bad = dict(payload, graph="not-this-graph")
+        fresh = ExecutionState(design, bind_programs(graph))
+        with pytest.raises(ValueError):
+            restore_state(fresh, bad)
+        with pytest.raises(FileNotFoundError):
+            resume_execution(design, os.path.join(d, "nope"))
+
+
+def test_checkpoint_every_requires_directory(stencil4):
+    graph, design, _ = stencil4
+    with pytest.raises(ValueError):
+        execute(design, bind_programs(graph), checkpoint_every=4)
+
+
+# ---------------------------------------------------------------------------
+# The scenario matrix.
+# ---------------------------------------------------------------------------
+
+def test_scenario_fault_model_mapping():
+    assert ChaosScenario("clean").fault_model() is None
+    sc = ChaosScenario("x", drop=0.1, down={5: ((0, 6),)},
+                       fail_threshold=4, seed=9)
+    fm = sc.fault_model()
+    assert fm.seed == 9 and fm.fail_threshold == 4
+    assert fm.for_link(5).down == ((0, 6),)
+    assert fm.for_link(0).drop == 0.1 and fm.for_link(0).down == ()
+
+
+def test_default_matrix_shape():
+    names = [sc.name for sc in default_matrix()]
+    assert len([sc for sc in default_matrix()
+                if sc.lossy and not sc.down]) >= 3     # 3 drop tiers
+    assert len([sc for sc in default_matrix() if sc.down]) >= 2
+    assert any(sc.kill_sweep is not None for sc in default_matrix())
+    assert len(set(names)) == len(names)
+
+
+def test_matrix_cell_stencil_drop(stencil4):
+    _, _, baseline = stencil4
+    cell = run_scenario(
+        "stencil",
+        ChaosScenario("drop-mid", drop=0.05, corrupt=0.02, reorder=0.03,
+                      seed=5),
+        baseline=baseline)
+    assert cell["ok"] and cell["bit_identical"]
+    assert cell["retransmit_bytes"] > 0
+    assert cell["overhead_sweeps"] >= 0
+
+
+def test_matrix_cell_stencil_kill_restore(stencil4):
+    _, _, baseline = stencil4
+    cell = run_scenario(
+        "stencil",
+        ChaosScenario("kill-restore", kill_sweep=6, barrier=4, seed=17),
+        baseline=baseline)
+    assert cell["ok"]
+    assert cell["restore_extra_sweeps"] <= 4 + 16
+
+
+@pytest.mark.slow
+def test_full_matrix_all_apps():
+    from repro.chaos import run_matrix
+    matrix = run_matrix()
+    assert matrix["ok"]
+    assert len(matrix["cells"]) == 4 * len(default_matrix())

@@ -6,10 +6,12 @@ once), the :func:`run_with_restarts` supervisor (restart counting, success
 after k failures, exhaustion), and the :class:`StragglerMonitor` EWMA
 detector driven by a scripted clock so its flagging is deterministic.
 """
+import numpy as np
 import pytest
 
 from repro.runtime import fault
 from repro.runtime.fault import (FailureInjector, StragglerMonitor,
+                                 backoff_delay,
                                  run_with_restarts)
 
 
@@ -84,6 +86,71 @@ def test_supervisor_only_catches_injected_faults():
         raise ValueError("a real bug, not a fault")
     with pytest.raises(ValueError, match="real bug"):
         run_with_restarts(broken, max_restarts=3)
+
+
+# ---------------------------------------------------------------------------
+# backoff_delay: capped exponential restart pacing, seeded jitter.
+# ---------------------------------------------------------------------------
+
+def test_backoff_doubles_then_caps():
+    # Jitter off: the schedule is exact — 1, 2, 4, 8, ..., capped at 30.
+    delays = [backoff_delay(n, base_s=1.0, cap_s=30.0, jitter=0.0)
+              for n in range(1, 9)]
+    assert delays == [1.0, 2.0, 4.0, 8.0, 16.0, 30.0, 30.0, 30.0]
+    # Huge attempt counts must not overflow the shift.
+    assert backoff_delay(10_000, base_s=1.0, cap_s=30.0, jitter=0.0) == 30.0
+    with pytest.raises(ValueError):
+        backoff_delay(0, base_s=1.0)
+
+
+def test_backoff_jitter_is_bounded_and_seeded():
+    rng1 = np.random.default_rng(5)
+    rng2 = np.random.default_rng(5)
+    seen = []
+    for n in range(1, 6):
+        d1 = backoff_delay(n, base_s=1.0, cap_s=30.0, jitter=0.1, rng=rng1)
+        d2 = backoff_delay(n, base_s=1.0, cap_s=30.0, jitter=0.1, rng=rng2)
+        assert d1 == d2                      # same seed: same schedule
+        nominal = min(30.0, 2.0 ** (n - 1))
+        assert 0.9 * nominal <= d1 <= 1.1 * nominal
+        seen.append(d1)
+    assert seen != [min(30.0, 2.0 ** (n - 1)) for n in range(1, 6)]
+    # jitter without an rng keeps the schedule exact (no hidden global rng).
+    assert backoff_delay(3, base_s=1.0, jitter=0.5) == 4.0
+
+
+def test_supervisor_backoff_schedule_without_real_sleep():
+    """The supervisor's restart pacing is assertable with an injected
+    sleep — no wall time passes, the schedule is the capped-exponential
+    one, and backoff_s=0 (legacy) never calls sleep at all."""
+    slept = []
+    inj = FailureInjector(fail_at_steps=[0, 1, 2, 3])
+    make_and_run, _ = _flaky_run(inj)
+    run_with_restarts(make_and_run, max_restarts=5, backoff_s=1.0,
+                      backoff_cap_s=4.0, jitter=0.0, sleep=slept.append)
+    assert slept == [1.0, 2.0, 4.0, 4.0]     # doubling, then the cap
+
+    slept2 = []
+    inj2 = FailureInjector(fail_at_steps=[0, 1])
+    make_and_run2, _ = _flaky_run(inj2)
+    run_with_restarts(make_and_run2, max_restarts=5, backoff_s=0.0,
+                      sleep=slept2.append)
+    assert slept2 == []                      # legacy hot restart
+
+
+def test_supervisor_backoff_jitter_reproducible_by_seed():
+    def schedule(seed):
+        slept = []
+        inj = FailureInjector(fail_at_steps=[0, 1, 2])
+        make_and_run, _ = _flaky_run(inj)
+        run_with_restarts(make_and_run, max_restarts=5, backoff_s=1.0,
+                          backoff_cap_s=8.0, jitter=0.25, seed=seed,
+                          sleep=slept.append)
+        return slept
+    assert schedule(3) == schedule(3)
+    assert schedule(3) != schedule(4)
+    for d, nominal in zip(schedule(3), [1.0, 2.0, 4.0]):
+        assert 0.75 * nominal <= d <= 1.25 * nominal
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis or skip
 
-from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ckpt import (CheckpointManager, latest_step, load_checkpoint,
+                        save_checkpoint)
 from repro.data import DataConfig, make_pipeline
 from repro.optim import (AdafactorConfig, AdamWConfig, adafactor_init,
                          adafactor_update, adamw_init, adamw_update,
@@ -120,6 +121,46 @@ def test_checkpoint_atomicity_tmp_ignored():
         os.makedirs(os.path.join(d, "step_9.tmp"))   # simulated crash
         mgr = CheckpointManager(d)
         assert mgr.latest_step() == 1
+
+
+def test_checkpoint_published_step_is_immutable_without_overwrite():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, {"x": jnp.zeros((2,))})
+        # Silently clobbering a published step is the failure mode the
+        # atomic layout exists to prevent: refuse by default...
+        with pytest.raises(FileExistsError, match="step_3"):
+            save_checkpoint(d, 3, {"x": jnp.ones((2,))})
+        got, _ = load_checkpoint(d, {"x": jnp.zeros((2,))}, step=3)
+        np.testing.assert_array_equal(np.asarray(got["x"]), [0.0, 0.0])
+        # ...and replace only on the explicit opt-in.
+        save_checkpoint(d, 3, {"x": jnp.ones((2,))}, overwrite=True)
+        got, _ = load_checkpoint(d, {"x": jnp.zeros((2,))}, step=3)
+        np.testing.assert_array_equal(np.asarray(got["x"]), [1.0, 1.0])
+        # Managed saves replace in place (a restarted trainer re-saves the
+        # step it restored) — no refusal through the manager.
+        CheckpointManager(d, save_interval=1).save(3, {"x": jnp.zeros((2,))},
+                                                   blocking=True)
+
+
+def test_checkpoint_crash_mid_write_restores_previous_step():
+    """A writer that dies mid-write leaves only a ``.tmp`` dir behind;
+    restore never sees it, and the next save of that step reclaims it."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"x": jnp.full((2,), 5.0)})
+        # Simulated crash mid-write of step 2: leaf written, no manifest,
+        # never renamed.
+        tmp = os.path.join(d, "step_2.tmp")
+        os.makedirs(tmp)
+        np.save(os.path.join(tmp, "0.npy"), np.ones((2,)))
+        assert latest_step(d) == 1
+        got, step = load_checkpoint(d, {"x": jnp.zeros((2,))})
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(got["x"]), [5.0, 5.0])
+        # Retrying the crashed save is not an "overwrite" — the step was
+        # never published — and it clears the leftovers.
+        save_checkpoint(d, 2, {"x": jnp.full((2,), 7.0)})
+        assert not os.path.exists(tmp)
+        assert latest_step(d) == 2
 
 
 # -- data pipeline -------------------------------------------------------------

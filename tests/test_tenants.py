@@ -22,11 +22,11 @@ from repro.exec import bind_programs, execute
 from repro.net import cluster_fabric
 from repro.net.transport import NetConfig
 from repro.tenants import (ADMIT, QUEUE, REJECT, SLO, AdmissionController,
-                           DeviceKill, Tenant, TenantLoad, TenantServer,
-                           TrafficConfig, bit_identical, fair_share,
-                           generate, isolation_check, load_sweep, merge,
-                           offered_load, recompile, shrink_cluster,
-                           simulate)
+                           DeviceKill, RecoveryPlan, Tenant, TenantLoad,
+                           TenantServer, TrafficConfig, bit_identical,
+                           fair_share, generate, isolation_check,
+                           load_sweep, merge, offered_load, plan_recovery,
+                           recompile, shrink_cluster, simulate)
 
 # ---------------------------------------------------------------------------
 # Traffic: seeded, open-loop, deterministic.
@@ -325,3 +325,131 @@ def test_solo_tenant_matches_solo_execution(compiled):
     assert rec.status == "done"
     assert bit_identical(rec.result.outputs, solo["a"].outputs)
     assert out.conservation["exact"]
+
+
+# ---------------------------------------------------------------------------
+# Recovery planning: restore-over-recompile + the kill edge cases.
+# ---------------------------------------------------------------------------
+
+def test_plan_recovery_prefers_restore_when_cluster_survives(tmp_path):
+    # No snapshot yet: recompile onto the survivors.
+    plan = plan_recovery([0, 2], [], checkpoint_dir=str(tmp_path))
+    assert plan.action == "recompile" and plan.ndev == 2
+    # A published snapshot + intact placement: restore from the barrier.
+    (tmp_path / "step_4").mkdir()
+    plan = plan_recovery([0, 2], [], checkpoint_dir=str(tmp_path))
+    assert isinstance(plan, RecoveryPlan)
+    assert plan.action == "restore" and plan.step == 4 and plan.ndev == 2
+    # A permanently dead placement device disqualifies the snapshot.
+    plan = plan_recovery([0, 2], [2], checkpoint_dir=str(tmp_path))
+    assert plan.action == "recompile" and plan.ndev == 1
+    # Nothing survives: the plan says decline (ndev 0), never restore.
+    plan = plan_recovery([2], [2], checkpoint_dir=str(tmp_path))
+    assert plan.action == "recompile" and plan.ndev == 0
+
+
+def test_transient_kill_restores_from_barrier(compiled, tmp_path):
+    """A transient device kill of a checkpointing tenant restores the SAME
+    design from its last sweep barrier (recovered_via='restore') and still
+    finishes bit-identical; the un-checkpointed peer is untouched."""
+    _, designs, solo = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    tenants = _tenants(designs)
+    tenants[0] = dataclasses.replace(tenants[0],
+                                     checkpoint_dir=str(tmp_path))
+    server = TenantServer(fabric, tenants)
+    out = server.run(faults=[DeviceKill(device=2, sweep=4, transient=True)],
+                     checkpoint_every=2)
+    killed = out.record("a")
+    assert killed.status == "killed" and killed.recovered_as == "a+recovered"
+    rec = out.record("a+recovered")
+    assert rec.status == "done"
+    assert rec.recovered_via == "restore"
+    assert rec.tenant.device_map == [0, 2]      # same placement, no shrink
+    assert rec.tenant.design is designs["a"]    # same design, no recompile
+    assert bit_identical(rec.result.outputs, solo["a"].outputs)
+    assert bit_identical(out.record("b").result.outputs, solo["b"].outputs)
+    assert out.conservation["exact"]
+
+
+def test_permanent_kill_recompiles_and_labels_it(compiled, tmp_path):
+    """Snapshots exist, but the device is permanently gone: the snapshot's
+    cluster no longer exists, so recovery recompiles onto survivors."""
+    _, designs, _ = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    tenants = _tenants(designs)
+    tenants[0] = dataclasses.replace(tenants[0],
+                                     checkpoint_dir=str(tmp_path))
+    server = TenantServer(fabric, tenants)
+    out = server.run(faults=[DeviceKill(device=2, sweep=4)],
+                     checkpoint_every=2)
+    rec = out.record("a+recovered")
+    assert rec.status == "done"
+    assert rec.recovered_via == "recompile"
+    assert rec.tenant.device_map == [0]
+    assert rec.tenant.checkpoint_dir is None    # old snapshots unusable
+
+
+def test_kill_that_leaves_no_survivors_declines_gracefully(compiled):
+    """A kill wiping a tenant's whole placement cannot recompile onto
+    anything: recovery raises the named DeadlockError instead of
+    admitting a zero-device design or hanging."""
+    from repro.exec.executor import DeadlockError
+    _, designs, _ = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    one_dev = recompile(designs["a"], 1)
+    server = TenantServer(fabric, [
+        Tenant("solo", one_dev, device_map=[2], inputs=_SPECS["a"]),
+    ])
+    with pytest.raises(DeadlockError, match="no surviving devices"):
+        server.run(faults=[DeviceKill(device=2, sweep=2)])
+    # recompile itself also refuses a zero-device ask.
+    with pytest.raises(ValueError):
+        recompile(designs["a"], 0)
+
+
+def test_double_kill_of_same_device_is_idempotent(compiled):
+    """The second kill of an already-dead device finds no running victim
+    on it: the first incarnation is not re-killed, the recovered one
+    (living elsewhere) is untouched, everyone finishes."""
+    _, designs, solo = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    server = TenantServer(fabric, _tenants(designs))
+    out = server.run(faults=[DeviceKill(device=2, sweep=2),
+                             DeviceKill(device=2, sweep=4)])
+    killed = out.record("a")
+    assert killed.status == "killed" and killed.killed_at == 2
+    assert killed.recovered_as == "a+recovered"
+    rec = out.record("a+recovered")
+    assert rec.status == "done"
+    # Exactly one recovered incarnation: the second kill was a no-op.
+    assert len([r for r in out.records if r.name.startswith("a")]) == 2
+    assert bit_identical(out.record("b").result.outputs, solo["b"].outputs)
+    assert out.conservation["exact"]
+
+
+def test_cancel_flow_twice_is_a_noop(compiled):
+    """cancel_flow is idempotent: the second call finds nothing, returns
+    nothing, and leaves every counter exactly where the first left it."""
+    _, designs, _ = compiled
+    fabric = cluster_fabric(fpga_ring_cluster(4))
+    server = TenantServer(fabric, _tenants(designs))
+    tr = server.transport
+    # Drive a few sweeps so flow 0 has traffic in flight, then tear it
+    # down twice.
+    for rec in server.records:
+        pass
+    sweep = 0
+    while not tr.active and sweep < 16:
+        for rec in server.records:
+            if rec.state is not None:
+                rec.state.advance(sweep)
+        tr.step(sweep)
+        sweep += 1
+    assert tr.active, "no in-flight traffic to cancel"
+    first = tr.cancel_flow(0)
+    snap = [(c.bytes, dict(c.flow_bytes)) for c in tr.counters]
+    second = tr.cancel_flow(0)
+    assert first and second == []
+    assert snap == [(c.bytes, dict(c.flow_bytes)) for c in tr.counters]
+    assert not tr.flow_active(0)
