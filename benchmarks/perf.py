@@ -58,10 +58,19 @@ measured from the co-run calibrates a virtual-time load sweep (p50/p99
 latency and goodput vs offered load) and the 2×-oversubscription isolation
 invariant (victim goodput ≥ 90% of fair share).  All asserted in both
 modes.
+
+Observability (the ``obs`` section, schema v7): the stencil design
+executes plain, with the ``NULL_TRACER``, and with a recording
+``Tracer`` — the null tracer must cost < 1% over plain and the
+recording tracer < 10% (hard asserts in full mode only; smoke records
+the fractions without flaking on CI timer noise), while transparency
+(bit-identity, identical counters, exact trace↔report reconciliation)
+is asserted in both modes.
 """
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import math
 import sys
@@ -255,7 +264,7 @@ def bench_net_exec(app: str, ndev: int) -> Dict[str, object]:
         "hop_weighted_bytes": rep.net_hop_weighted_bytes,
         "max_link_utilization": cong.max_utilization,
         "stalled_flits": sum(l.stalled_flits for l in cong.links),
-        "congestion_waits": sum(rep.congestion_waits.values()),
+        "congestion_waits": sum(rep.task_congestion_waits.values()),
         "feedback": dict(fb.detail) if fb else None,
         "agreement": agree,
     }
@@ -349,7 +358,7 @@ def bench_mem_exec(app: str, ndev: int) -> Dict[str, object]:
         "app": app, "ndev": ndev, "graph": graph.name,
         "bit_identical": True,
         "sweeps_bank": rep.sweeps, "sweeps_ideal": ideal.report.sweeps,
-        "mem_waits": sum(rep.mem_waits.values()),
+        "mem_waits": sum(rep.task_mem_waits.values()),
         "bank_bytes": rep.mem_bank_bytes,
         "delivered_bytes": rep.mem_delivered_bytes,
         "requested_bytes": rep.mem_requested_bytes,
@@ -564,6 +573,129 @@ def bench_chaos(smoke: bool) -> Dict[str, object]:
     }
 
 
+def bench_obs(smoke: bool) -> Dict[str, object]:
+    """Observability overhead (schema v7 ``obs``): the stencil design
+    executes through the fabric three ways — plain (``tracer=None``),
+    with the explicit ``NULL_TRACER``, and with a recording ``Tracer`` —
+    best-of-k wall times.  A recording tracer must cost < 10% over the
+    plain run and the null tracer < 1%; both are hard asserts in full
+    mode only (smoke machines' timer noise at ~10ms scale would flake),
+    smoke just records the fractions.  Transparency (bit-identical
+    outputs, identical counters, exact trace↔report reconciliation) is
+    asserted in BOTH modes — correctness never rides on the clock."""
+    from repro.compiler import compile as tapa_compile
+    from repro.core import fpga_ring_cluster
+    from repro.exec import bind_programs, execute
+    from repro.net import cluster_fabric
+    from repro.obs import (NULL_TRACER, Tracer, analyze,
+                           assert_trace_report_consistent)
+    from repro.tenants import bit_identical
+
+    mod = _app_module("stencil")
+    ndev = 2 if smoke else 4
+    graph = mod.build_graph(ndev)
+    cluster = fpga_ring_cluster(ndev)
+    design = tapa_compile(graph, cluster, _options(mod, ndev).replace(
+        fabric=cluster_fabric(cluster), floorplan_devices=None,
+        passes=("normalize_units", "partition", "congestion_feedback",
+                "pipeline_interconnect", "schedule")))
+
+    def _timed(run):
+        gc.collect()                 # no collector pause mid-sample
+        t0 = time.perf_counter()
+        run()
+        return time.perf_counter() - t0
+
+    # A long-enough workload that the sweep loop dominates the clock
+    # (streams scales iterations without touching the compiled design),
+    # bound ONCE so RNG input generation stays outside the timed region.
+    binding = bind_programs(graph, {"streams": 8 if smoke else 32})
+    order = ["plain", "null", "traced"]
+    variants = {
+        "plain": lambda: execute(design, binding),
+        "null": lambda: execute(design, binding, tracer=NULL_TRACER),
+        "traced": lambda: execute(design, binding, tracer=Tracer()),
+    }
+    for run in variants.values():               # warm (jit, device init)
+        run()
+    # Scheduling noise on a shared box is one-sided (preemption only
+    # ever ADDS time), so a low-order statistic is the honest estimate
+    # of each variant's cost — the 2nd-smallest, so one lucky outlier
+    # can't open a phantom gap between identical code paths.  Rounds
+    # rotate the variant order (cancels position bias) and the floors
+    # only tighten with more rounds, so sample adaptively until they
+    # meet the thresholds or the round cap is hit — a genuine overhead
+    # never converges under its floor and still fails the assert.
+    samples = {name: [] for name in variants}
+
+    def _round(i):
+        for name in order[i % 3:] + order[:i % 3]:
+            samples[name].append(_timed(variants[name]))
+
+    def _floor(name):
+        return sorted(samples[name])[1]
+
+    def _fracs():
+        plain = _floor("plain")
+        return (_floor("null") / plain - 1.0,
+                _floor("traced") / plain - 1.0)
+
+    min_rounds, max_rounds = (3, 3) if smoke else (7, 40)
+    gc.disable()
+    try:
+        rounds = 0
+        while rounds < max_rounds:
+            _round(rounds)
+            rounds += 1
+            if rounds < min_rounds:
+                continue
+            nf, tf = _fracs()
+            if nf < 0.01 and tf < 0.10:
+                break
+    finally:
+        gc.enable()
+    plain_s = _floor("plain")
+    null_s = _floor("null")
+    traced_s = _floor("traced")
+
+    # Transparency + exact reconciliation (both modes).
+    base = execute(design, bind_programs(graph))
+    tracer = Tracer()
+    res = execute(design, bind_programs(graph), tracer=tracer)
+    if not bit_identical(base.outputs, res.outputs):
+        raise AssertionError("recording tracer perturbed the numerics")
+    if (base.report.sweeps, base.report.net_retransmit_bytes_total) != \
+            (res.report.sweeps, res.report.net_retransmit_bytes_total):
+        raise AssertionError("recording tracer perturbed the counters")
+    assert_trace_report_consistent(tracer, res.report)
+    crit = analyze(tracer, sweeps=res.report.sweeps)
+
+    null_frac = null_s / plain_s - 1.0
+    traced_frac = traced_s / plain_s - 1.0
+    null_ok = null_frac < 0.01
+    traced_ok = traced_frac < 0.10
+    if not smoke:
+        if not null_ok:
+            raise AssertionError(
+                f"NULL_TRACER overhead {null_frac:.2%} >= 1% floor")
+        if not traced_ok:
+            raise AssertionError(
+                f"recording-tracer overhead {traced_frac:.2%} >= 10% floor")
+    return {
+        "app": "stencil", "ndev": ndev,
+        "events": len(tracer),
+        "rounds": rounds,
+        "plain_s": round(plain_s, 6),
+        "null_s": round(null_s, 6),
+        "traced_s": round(traced_s, 6),
+        "null_overhead_frac": round(null_frac, 4),
+        "traced_overhead_frac": round(traced_frac, 4),
+        "null_ok": null_ok, "traced_ok": traced_ok,
+        "bit_identical": True,
+        "critical_task": crit.critical().task,
+    }
+
+
 def bench_kl_refine(nv: int = 256, ndev: int = 8,
                     avg_degree: int = 8) -> Dict[str, object]:
     """Synthetic-graph micro-benchmark of the PR 3 kl_refine rewrite."""
@@ -722,6 +854,13 @@ def main() -> int:
               f"(barrier {chaos['restore']['barrier_sweeps']} + "
               f"drain {chaos['restore']['drain_slack_sweeps']})")
 
+    obs = bench_obs(args.smoke)
+    print(f"[obs  tracer overhead       ] null "
+          f"{obs['null_overhead_frac']:+.2%} traced "
+          f"{obs['traced_overhead_frac']:+.2%} "
+          f"({obs['events']} events, crit task {obs['critical_task']}, "
+          f"{'asserted' if not args.smoke else 'recorded'})")
+
     kl = bench_kl_refine()
     print(f"[kl_refine {kl['nodes']}n/{kl['ndev']}d] ref {kl['ref_s']}s "
           f"vec {kl['vec_s']}s -> {kl['speedup']}x")
@@ -739,7 +878,7 @@ def main() -> int:
                 f"model build speedup {build['speedup']} below 1.5x floor")
 
     out = {
-        "schema": "bench-compile/v6",
+        "schema": "bench-compile/v7",
         "created_unix": time.time(),
         "mode": "smoke" if args.smoke else "full",
         "configs": records,
@@ -763,6 +902,8 @@ def main() -> int:
         # Chaos matrix (repro.chaos): seeded faults, bit-identity,
         # goodput conservation, restore cost.
         "chaos": chaos,
+        # Observability (repro.obs): tracer overhead + transparency.
+        "obs": obs,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)

@@ -55,11 +55,11 @@ def compile_app(app: str, ndev: int = 4):
 
 
 def _execute(graph, design, *, faults=None, injector=None,
-             checkpoint_dir=None, checkpoint_every=None):
+             checkpoint_dir=None, checkpoint_every=None, tracer=None):
     from ..exec import bind_programs, execute
     return execute(design, bind_programs(graph), faults=faults,
                    injector=injector, checkpoint_dir=checkpoint_dir,
-                   checkpoint_every=checkpoint_every)
+                   checkpoint_every=checkpoint_every, tracer=tracer)
 
 
 def _run_kill_cell(graph, design, scenario: ChaosScenario, baseline,
@@ -95,9 +95,11 @@ def _run_kill_cell(graph, design, scenario: ChaosScenario, baseline,
 
 
 def run_scenario(app: str, scenario: ChaosScenario, *, ndev: int = 4,
-                 baseline=None) -> Dict[str, Any]:
+                 baseline=None, tracer=None) -> Dict[str, Any]:
     """Run one matrix cell; raises AssertionError on any broken guarantee,
-    returns the cell's JSON-ready record otherwise."""
+    returns the cell's JSON-ready record otherwise.  ``tracer`` records the
+    faulted run (baseline and replay stay untraced — the bit-identity and
+    determinism asserts double as the tracer-transparency check)."""
     from ..tenants import bit_identical
     graph, design = compile_app(app, ndev)
     if baseline is None:
@@ -110,15 +112,15 @@ def run_scenario(app: str, scenario: ChaosScenario, *, ndev: int = 4,
     if scenario.kill_sweep is not None:
         result = _run_kill_cell(graph, design, scenario, baseline, cell)
     else:
-        result = _execute(graph, design, faults=fm)
+        result = _execute(graph, design, faults=fm, tracer=tracer)
         # Determinism: the same seeded scenario replays to the same sweep
         # count and the same retransmit tally, bit for bit.
         if fm is not None:
             replay = _execute(graph, design, faults=fm)
             assert replay.report.sweeps == result.report.sweeps, \
                 f"{scenario.name}: replay diverged in sweeps"
-            assert (replay.report.net_retransmit_bytes
-                    == result.report.net_retransmit_bytes), \
+            assert (replay.report.net_retransmit_bytes_total
+                    == result.report.net_retransmit_bytes_total), \
                 f"{scenario.name}: replay diverged in retransmits"
             assert bit_identical(replay.outputs, result.outputs), \
                 f"{scenario.name}: replay diverged in outputs"
@@ -130,7 +132,7 @@ def run_scenario(app: str, scenario: ChaosScenario, *, ndev: int = 4,
     cell.update({
         "sweeps": result.report.sweeps,
         "overhead_sweeps": result.report.sweeps - baseline.report.sweeps,
-        "retransmit_bytes": result.report.net_retransmit_bytes,
+        "retransmit_bytes": result.report.net_retransmit_bytes_total,
         "goodput_hop_bytes": result.report.net_goodput_hop_bytes,
         "bit_identical": True,
         "agreement": agree,

@@ -9,10 +9,14 @@ barrier-bounded restore cost.  Writes the fault-matrix JSON artifact.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.chaos.smoke \
-        [--app stencil] [--full] [--out results/chaos_smoke.json]
+        [--app stencil] [--full] [--out results/chaos_smoke.json] \
+        [--trace results/chaos_trace.json]
 
 ``--full`` runs the complete :func:`repro.chaos.default_matrix` over all
-four paper apps (the BENCH path; several minutes).
+four paper apps (the BENCH path; several minutes).  ``--trace`` re-runs
+the drop-tier cell on the stencil 4-ring with a recording tracer, writes
+its Chrome trace, and asserts the critical-path analysis attributes at
+least one sweep to ARQ retransmits on the faulted link.
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -30,11 +34,13 @@ def main() -> int:
     ap.add_argument("--full", action="store_true",
                     help="full matrix over all four apps")
     ap.add_argument("--out", default="results/chaos_smoke.json")
+    ap.add_argument("--trace", default=None,
+                    help="write the traced drop-tier cell's Chrome trace")
     args = ap.parse_args()
 
     import jax
 
-    from .runner import run_matrix
+    from .runner import run_matrix, run_scenario
     from .scenario import ChaosScenario, default_matrix
 
     print(f"devices: {jax.devices()}")
@@ -54,6 +60,36 @@ def main() -> int:
         )
     matrix = run_matrix(apps, scenarios, verbose=True)
     assert matrix["ok"]
+
+    if args.trace:
+        # The observability acceptance cell: trace the drop-tier scenario
+        # on the stencil 4-ring and prove the critical-path analysis pins
+        # recovery sweeps on the ARQ traffic of the faulted link.
+        from ..obs.critpath import analyze
+        from ..obs.trace import Tracer, write_chrome_trace
+        drop = ChaosScenario("drop-mid", drop=0.05, corrupt=0.02,
+                             reorder=0.03, seed=5)
+        tracer = Tracer()
+        cell = run_scenario("stencil", drop, tracer=tracer)
+        crit = analyze(tracer, sweeps=cell["sweeps"])
+        faulted = {e[2] for e in tracer.iter_kind("retransmit")}
+        assert faulted, "drop-tier cell produced no retransmits"
+        assert any(crit.fault_link_sweeps.get(li, 0) >= 1
+                   for li in faulted), \
+            "no fault sweep attributed to the faulted links"
+        assert sum(t.fault for t in crit.tasks) >= 1, \
+            "critpath attributed no task sweep to ARQ recovery"
+        doc = write_chrome_trace(tracer, args.trace)
+        matrix["traced_cell"] = {
+            "scenario": drop.name,
+            "trace_events": len(doc["traceEvents"]),
+            "fault_link_sweeps": {str(k): v for k, v in
+                                  crit.fault_link_sweeps.items()},
+            "fault_task_sweeps": sum(t.fault for t in crit.tasks),
+        }
+        print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
+              f"to {args.trace}; fault sweeps on faulted links "
+              f"{matrix['traced_cell']['fault_link_sweeps']}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

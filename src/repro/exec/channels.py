@@ -44,6 +44,7 @@ import jax
 import numpy as np
 
 from ..core.graph import Channel
+from ..obs.trace import coerce_tracer
 
 
 def token_bytes(token: Any) -> int:
@@ -113,7 +114,8 @@ class FifoChannel:
                  dst_dev: int, *, capacity: Optional[int] = None,
                  latency: int = 1, dst_device=None, transport=None,
                  net_src_dev: Optional[int] = None,
-                 net_dst_dev: Optional[int] = None):
+                 net_dst_dev: Optional[int] = None,
+                 tracer=None, trace_flow: int = 0):
         if capacity is None:
             capacity = channel.depth
         if capacity < 1:
@@ -140,6 +142,8 @@ class FifoChannel:
         self._q: Deque[_Entry] = collections.deque()
         self._pending: Dict[int, _Entry] = {}     # message id -> entry
         self.stats = ChannelStats()
+        self.tracer = coerce_tracer(tracer)
+        self.trace_flow = trace_flow
 
     # -- state queries ------------------------------------------------------
     @property
@@ -187,6 +191,9 @@ class FifoChannel:
         if self.inter_device:
             nbytes = token_bytes(token)
             self.stats.measured_bytes += nbytes
+            if self.tracer.enabled:
+                self.tracer.channel_push(sweep, self.index, self.src,
+                                         self.dst, nbytes, self.trace_flow)
             if self.transport is not None:
                 mid = self.transport.submit(self.index, self.net_src_dev,
                                             self.net_dst_dev, nbytes, sweep)
@@ -219,6 +226,9 @@ class FifoChannel:
                 f"pop on empty/unripe channel {self.src}->{self.dst}")
         entry = self._q.popleft()
         token = entry.token
+        if self.inter_device and self.tracer.enabled:
+            self.tracer.channel_pop(sweep, self.index, self.src, self.dst,
+                                    self.trace_flow)
         if (self.inter_device and self.transport is None
                 and not self.eager_transfer):
             token = _put(token, self.dst_device)

@@ -79,6 +79,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 import jax
 
 from ..compiler.artifact import CompiledDesign
+from ..obs.trace import coerce_tracer
 from .channels import FifoChannel
 from .programs import (SOURCE_KEY, ProgramBinding, RoutedOutput,
                        bind_programs)
@@ -163,7 +164,9 @@ class ExecutionState:
                  transport: Any = None,
                  memsys: Any = None,
                  device_map: Optional[Sequence[int]] = None,
-                 faults: Any = None):
+                 faults: Any = None,
+                 tracer: Any = None,
+                 trace_flow: int = 0):
         if design.partition is None:
             raise ValueError("execute() needs a partitioned design "
                              "(run the partition pass)")
@@ -171,6 +174,10 @@ class ExecutionState:
             binding = bind_programs(design.graph, inputs)
         self.design = design
         self.binding = binding
+        # Observability (repro.obs): the default NULL_TRACER keeps every
+        # emit a guarded no-op — the untraced path allocates nothing.
+        self.tracer = coerce_tracer(tracer)
+        self.trace_flow = int(trace_flow)
         graph, assign = design.graph, design.partition.assignment
         self.graph, self.assign = graph, assign
         rep = design.pipeline_report
@@ -204,7 +211,8 @@ class ExecutionState:
                         f"fabric spans {fabric.num_devices} devices but the "
                         f"cluster has {design.cluster.num_devices}")
                 transport = FabricTransport(fabric, net_config,
-                                            faults=faults)
+                                            faults=faults,
+                                            tracer=self.tracer)
         else:
             nfab = transport.fabric.num_devices
             bad = [d for d in self.device_map[:max(1, ndev)] if d >= nfab]
@@ -222,7 +230,8 @@ class ExecutionState:
                 dst_device=jax_dev[assign[ch.dst] % len(jax_dev)],
                 transport=transport,
                 net_src_dev=self.device_map[assign[ch.src]],
-                net_dst_dev=self.device_map[assign[ch.dst]]))
+                net_dst_dev=self.device_map[assign[ch.dst]],
+                tracer=self.tracer, trace_flow=self.trace_flow))
         for i, token in binding.prime.items():
             self.channels[i].prime(token)
 
@@ -262,7 +271,7 @@ class ExecutionState:
             bank_map = dict(design.bank_map or {})
             if memsys is None and mem_config is not None:
                 from ..mem.banks import MemorySystem
-                memsys = MemorySystem(ndev, mem_config)
+                memsys = MemorySystem(ndev, mem_config, tracer=self.tracer)
             if memsys is not None and not bank_map:
                 from ..mem.contention import default_bank_map
                 bank_map = default_bank_map(graph, assign, memsys.config)
@@ -272,7 +281,8 @@ class ExecutionState:
                         len(self.mem_channels), task, stream,
                         binding.mem_reads[task][stream], T,
                         device=assign[task], bank=bank_map.get(task, 0),
-                        memsys=memsys)
+                        memsys=memsys, tracer=self.tracer,
+                        trace_flow=self.trace_flow)
                     self.mem_channels.append(mc)
                     self.mem_chs[task].append(mc)
         self.memsys = memsys
@@ -382,6 +392,7 @@ class ExecutionState:
         firing count.  Does NOT step the transport / memory system — the
         owner of those does (``run()`` solo, the tenant server shared)."""
         binding, T = self.binding, self.iterations
+        tr, flow = self.tracer, self.trace_flow
         fired_this_sweep = 0
         for mc in self.mem_channels:
             # Issue reads ahead of consumption, up to the credit bound —
@@ -404,6 +415,11 @@ class ExecutionState:
                             # congestion, not a §4.6 depth imbalance.
                             self.congestion_waits[v] = \
                                 self.congestion_waits.get(v, 0) + 1
+                            if tr.enabled:
+                                # reason "net" mirrors this tally exactly
+                                # (the trace-vs-report consistency assert).
+                                tr.task_wait(sweep, v, self.assign[v],
+                                             "net", flow)
                             continue
                         # A bounded FIFO may transiently saturate while the
                         # pipeline fills (bounded by the paths' hop-count
@@ -411,6 +427,9 @@ class ExecutionState:
                         # is the unbalanced-cut-set signature.
                         self.starve_events[v] = \
                             self.starve_events.get(v, 0) + 1
+                        if tr.enabled:
+                            tr.task_wait(sweep, v, self.assign[v],
+                                         "starve", flow)
                         self.starve_detail.append({
                             "sweep": sweep, "task": v,
                             "starved_input": f"{empty[0].src}->{v}",
@@ -430,12 +449,34 @@ class ExecutionState:
                                 f"{d['full_input']} (run the "
                                 f"pipeline_interconnect pass or raise "
                                 f"min_depth)")
+                        continue
+                    if tr.enabled:
+                        # Trace-only reasons (never tallied by the legacy
+                        # counters): input still transiting the fabric
+                        # without a saturated sibling, a plain dataflow
+                        # dependency, or downstream backpressure.
+                        if empty:
+                            reason = ("transit" if any(
+                                fc.in_flight > 0 for fc in empty)
+                                else "upstream")
+                        else:
+                            reason = "backpressure"
+                        tr.task_wait(sweep, v, self.assign[v], reason, flow)
+                    continue
+                if tr.enabled and not space:
+                    # A source task (no in-channels) blocked on a full
+                    # output FIFO.
+                    tr.task_wait(sweep, v, self.assign[v], "backpressure",
+                                 flow)
                 continue
             if self.mem_chs[v] and not all(mc.response_ready(sweep)
                                            for mc in self.mem_chs[v]):
                 # The graph is ready but a memory response is still in the
                 # bank pipe — read_data.empty() on the async_mmap side.
                 self.mem_waits[v] = self.mem_waits.get(v, 0) + 1
+                if tr.enabled:
+                    # reason "mem" mirrors the mem_waits tally exactly.
+                    tr.task_wait(sweep, v, self.assign[v], "mem", flow)
                 continue
             token_in: Dict[str, Any] = {fc.src: fc.pop(sweep)
                                         for fc in in_chs}
@@ -447,9 +488,11 @@ class ExecutionState:
             t0 = time.perf_counter()
             out = binding.programs[v](token_in)
             _block(out)
-            self.busy_s[dev] = (self.busy_s.get(dev, 0.0)
-                                + time.perf_counter() - t0)
+            busy = time.perf_counter() - t0
+            self.busy_s[dev] = self.busy_s.get(dev, 0.0) + busy
             self.dev_fired[dev] = self.dev_fired.get(dev, 0) + 1
+            if tr.enabled:
+                tr.task_fire(sweep, v, dev, busy, flow)
             if isinstance(out, RoutedOutput):
                 for fc in out_chs:
                     fc.push(out[fc.dst], sweep)
@@ -475,7 +518,8 @@ class ExecutionState:
             starvation_events=self.starve_events,
             starvation_detail=self.starve_detail, transport=self.transport,
             congestion_waits=self.congestion_waits, memsys=self.memsys,
-            mem_channels=self.mem_channels, mem_waits=self.mem_waits)
+            mem_channels=self.mem_channels, mem_waits=self.mem_waits,
+            tracer=self.tracer)
         outputs = (self.binding.finalize(self.sink_outputs)
                    if self.binding.finalize is not None
                    else self.sink_outputs)
@@ -519,6 +563,9 @@ class ExecutionState:
                     and (sweep + 1 - start_sweep) % checkpoint_every == 0):
                 from .snapshot import save_snapshot   # avoid import cycle
                 save_snapshot(self, sweep, checkpoint_dir)
+                if self.tracer.enabled:
+                    self.tracer.barrier(sweep, f"step_{sweep}",
+                                        self.trace_flow)
             done = self.done
             if done:
                 break
@@ -565,7 +612,8 @@ def execute(design: CompiledDesign,
             faults: Any = None,
             injector: Any = None,
             checkpoint_dir: Optional[str] = None,
-            checkpoint_every: Optional[int] = None) -> ExecutionResult:
+            checkpoint_every: Optional[int] = None,
+            tracer: Any = None) -> ExecutionResult:
     """Run ``design`` as a multi-device dataflow program.
 
     ``binding`` defaults to the app hook resolved from the graph's name
@@ -585,11 +633,17 @@ def execute(design: CompiledDesign,
     into lossy-link + ARQ + route-repair mode (``None`` keeps every path
     byte-identical); ``injector`` / ``checkpoint_dir`` /
     ``checkpoint_every`` are forwarded to :meth:`ExecutionState.run`.
+
+    Observability (:mod:`repro.obs`): ``tracer`` is a
+    :class:`~repro.obs.trace.Tracer` recording sweep-granular typed events
+    from every layer (``None`` → the zero-overhead ``NULL_TRACER``); a
+    recording tracer is attached to the result as ``report.trace``.
     """
     return ExecutionState(
         design, binding, inputs=inputs, devices=devices,
         max_sweeps=max_sweeps, starve_limit=starve_limit,
         check_starvation=check_starvation, fabric=fabric,
-        net_config=net_config, mem=mem, faults=faults).run(
+        net_config=net_config, mem=mem, faults=faults,
+        tracer=tracer).run(
             injector=injector, checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every)

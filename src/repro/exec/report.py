@@ -44,10 +44,29 @@ The ``mem`` block carries the measured per-bank
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+import warnings
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from .channels import FifoChannel
+
+
+def _deprecated_field(old: str, new: str):
+    """One-release shim: ``report.<old>`` warns and forwards to
+    ``report.<new>`` (the PR 2 pass-registry migration style — read the
+    canonical field, or better, the ``report.metrics`` registry view)."""
+
+    def get(self):
+        warnings.warn(
+            f"ExecutionReport.{old} is deprecated; read "
+            f"ExecutionReport.{new} (or the report.metrics registry view) "
+            f"instead", DeprecationWarning, stacklevel=2)
+        return getattr(self, new)
+
+    get.__name__ = old
+    get.__doc__ = f"Deprecated alias for :attr:`{new}`."
+    return property(get)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,7 +140,8 @@ class ExecutionReport:
     schedule_comm_bytes: Optional[float]       # Σ cut bytes_per_step (model)
     # Network fabric (None on the ideal path).
     congestion: Optional[Any] = None           # net.CongestionReport
-    congestion_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    task_congestion_waits: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
     measured_route_comm_cost: float = 0.0      # per-link Eq. 2 over the cut
     # Fault-mode accounting (repro.chaos; None when faults were off).
     # Under route repair a message may deliver over a different route than
@@ -129,12 +149,30 @@ class ExecutionReport:
     # transport's delivered-bytes × hops-at-delivery tally, not the static
     # per-channel route length.
     net_goodput_hop_bytes: Optional[int] = None
-    net_retransmit_bytes: int = 0
+    net_retransmit_bytes_total: int = 0
     # HBM bank model (None/empty on the ideal memory path).
     mem_contention: Optional[Any] = None       # mem.MemContentionReport
     mem_channels: List[MemChannelTrace] = dataclasses.field(
         default_factory=list)
-    mem_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    task_mem_waits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Observability (repro.obs): the recorded trace, when one was attached.
+    trace: Optional[Any] = None                # obs.Tracer (None if untraced)
+
+    # One-release deprecation shims for the pre-registry counter names.
+    congestion_waits = _deprecated_field(
+        "congestion_waits", "task_congestion_waits")
+    mem_waits = _deprecated_field("mem_waits", "task_mem_waits")
+    net_retransmit_bytes = _deprecated_field(
+        "net_retransmit_bytes", "net_retransmit_bytes_total")
+
+    @functools.cached_property
+    def metrics(self):
+        """The unified ``layer.object.metric`` registry view of this
+        report (:func:`repro.obs.metrics.from_report`) — the canonical
+        way to read counters (``net.link.*``, ``mem.bank.*``,
+        ``exec.task.*``)."""
+        from ..obs.metrics import from_report   # deferred: optional layer
+        return from_report(self)
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -259,18 +297,19 @@ class ExecutionReport:
                 "hop_weighted_bytes": self.net_hop_weighted_bytes,
                 "link_bytes": self.net_link_bytes,
                 "route_comm_cost": self.measured_route_comm_cost,
-                "congestion_waits": dict(self.congestion_waits),
+                "congestion_waits": dict(self.task_congestion_waits),
                 **self.congestion.summary(),
             }
             if self.net_goodput_hop_bytes is not None:
                 out["net"]["goodput_hop_bytes"] = self.net_goodput_hop_bytes
-                out["net"]["retransmit_bytes"] = self.net_retransmit_bytes
+                out["net"]["retransmit_bytes"] = \
+                    self.net_retransmit_bytes_total
         if self.mem_channels or self.used_mem:
             out["mem"] = {
                 "requested_bytes": self.mem_requested_bytes,
                 "delivered_bytes": self.mem_delivered_bytes,
                 "bank_bytes": self.mem_bank_bytes,
-                "mem_waits": dict(self.mem_waits),
+                "mem_waits": dict(self.task_mem_waits),
                 "channels": [c.to_json() for c in self.mem_channels],
                 **(self.mem_contention.summary() if self.used_mem else {}),
             }
@@ -287,7 +326,8 @@ def build_report(*, design, channels: Sequence[FifoChannel],
                  congestion_waits: Optional[Mapping[str, int]] = None,
                  memsys=None,
                  mem_channels: Sequence[Any] = (),
-                 mem_waits: Optional[Mapping[str, int]] = None
+                 mem_waits: Optional[Mapping[str, int]] = None,
+                 tracer=None
                  ) -> ExecutionReport:
     """Assemble the report from live channels + the design's analytics."""
     part, cluster = design.partition, design.cluster
@@ -378,10 +418,11 @@ def build_report(*, design, channels: Sequence[FifoChannel],
         schedule_makespan_s=sched.makespan if sched is not None else None,
         schedule_comm_bytes=sched.comm_bytes if sched is not None else None,
         congestion=congestion,
-        congestion_waits=dict(congestion_waits or {}),
+        task_congestion_waits=dict(congestion_waits or {}),
         measured_route_comm_cost=route_cost,
         net_goodput_hop_bytes=goodput_hop,
-        net_retransmit_bytes=retransmit,
+        net_retransmit_bytes_total=retransmit,
         mem_contention=mem_contention,
         mem_channels=mem_traces,
-        mem_waits=dict(mem_waits or {}))
+        task_mem_waits=dict(mem_waits or {}),
+        trace=tracer if getattr(tracer, "enabled", False) else None)

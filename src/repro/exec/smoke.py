@@ -7,7 +7,8 @@ and writes the ExecutionReport JSON for the CI artifact.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.exec.smoke [--app stencil] \
-        [--ndev 4] [--out results/exec_smoke.json]
+        [--ndev 4] [--out results/exec_smoke.json] \
+        [--trace results/exec_trace.json]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -24,6 +25,8 @@ def main() -> int:
                     choices=["stencil", "pagerank", "knn", "cnn"])
     ap.add_argument("--ndev", type=int, default=4)
     ap.add_argument("--out", default="results/exec_smoke.json")
+    ap.add_argument("--trace", default=None,
+                    help="write the run's Chrome trace JSON here")
     args = ap.parse_args()
 
     import jax
@@ -32,6 +35,7 @@ def main() -> int:
     from ..apps import APPS
     from ..compiler import CompileOptions, compile as tapa_compile
     from ..core import fpga_ring_cluster
+    from ..obs.trace import Tracer, write_chrome_trace
     from . import bind_programs, execute
 
     print(f"devices: {jax.devices()}")
@@ -43,7 +47,8 @@ def main() -> int:
                                          exact_limit=1500))
     # One binding for both the run and the reference (same inputs).
     binding = bind_programs(graph)
-    result = execute(design, binding)
+    tracer = Tracer() if args.trace else None
+    result = execute(design, binding, tracer=tracer)
 
     expected = binding.reference()
     got = result.outputs
@@ -59,6 +64,11 @@ def main() -> int:
     assert all(agree.values()), f"comm accounting mismatch: {agree}"
     assert not result.report.starvation_events, \
         f"unexpected starvation: {result.report.starvation_events}"
+
+    if tracer is not None:
+        doc = write_chrome_trace(tracer, args.trace)
+        print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
+              f"to {args.trace}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

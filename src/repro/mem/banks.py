@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from ..obs.trace import coerce_tracer
+
 
 @dataclasses.dataclass(frozen=True)
 class MemConfig:
@@ -103,9 +105,13 @@ class MemorySystem:
     """
 
     def __init__(self, num_devices: int,
-                 config: Optional[MemConfig] = None):
+                 config: Optional[MemConfig] = None,
+                 tracer=None):
         self.config = config or MemConfig()
         self.num_devices = int(num_devices)
+        # Observability (repro.obs): emits are guarded by tracer.enabled —
+        # the default NULL_TRACER keeps the serve loop allocation-free.
+        self.tracer = coerce_tracer(tracer)
         nbanks = self.num_devices * self.config.banks_per_device
         self.counters: List[BankCounters] = [BankCounters()
                                              for _ in range(nbanks)]
@@ -199,6 +205,10 @@ class MemorySystem:
                         c.flow_bursts.get(req.flow, 0) + 1
                     c.flow_bytes[req.flow] = \
                         c.flow_bytes.get(req.flow, 0) + bts
+                    if self.tracer.enabled:
+                        self.tracer.bank_burst(
+                            sweep, bid, bid // self.config.banks_per_device,
+                            bts, req.flow, req.chan_index)
                     self.total_served_bytes += bts
                     budget -= 1
                     served_on_bank += 1

@@ -28,6 +28,7 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..exec.channels import token_bytes
+from ..obs.trace import coerce_tracer
 from .banks import MemorySystem
 
 
@@ -68,7 +69,8 @@ class AsyncMemChannel:
     def __init__(self, index: int, task: str, stream: str,
                  tokens: Sequence[Any], count: int, *,
                  device: int, bank: int,
-                 memsys: Optional[MemorySystem] = None):
+                 memsys: Optional[MemorySystem] = None,
+                 tracer=None, trace_flow: int = 0):
         if len(tokens) < count:
             raise ValueError(
                 f"memory stream {task}.{stream}: {len(tokens)} tokens < "
@@ -85,6 +87,8 @@ class AsyncMemChannel:
         self._window: List[_Response] = []    # issued, unconsumed (in order)
         self._by_rid: Dict[int, _Response] = {}
         self.stats = MemChannelStats()
+        self.tracer = coerce_tracer(tracer)
+        self.trace_flow = trace_flow
 
     # -- request side (issue_read_addr) -------------------------------------
     @property
@@ -120,6 +124,11 @@ class AsyncMemChannel:
                                          nbytes, sweep)
                 resp.rid = rid
                 self._by_rid[rid] = resp
+                if self.tracer.enabled:
+                    self.tracer.mem_issue(
+                        sweep, self.index, self.task, self.device,
+                        self.memsys.bank_id(self.device, self.bank),
+                        nbytes, self.trace_flow)
             self._window.append(resp)
             self.stats.issued += 1
             self.stats.requested_bytes += nbytes

@@ -15,7 +15,8 @@ Writes the per-bank utilization JSON (the CI artifact):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.mem.smoke [--ndev 4] \
-        [--app axpy] [--out results/mem_smoke.json]
+        [--app axpy] [--out results/mem_smoke.json] \
+        [--trace results/mem_trace.json]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -32,6 +33,8 @@ def main() -> int:
                     choices=["axpy", "dot", "gemv", "axpydot"])
     ap.add_argument("--ndev", type=int, default=4)
     ap.add_argument("--out", default="results/mem_smoke.json")
+    ap.add_argument("--trace", default=None,
+                    help="write the bank-modeled run's Chrome trace here")
     args = ap.parse_args()
 
     import jax
@@ -41,6 +44,7 @@ def main() -> int:
     from ..compiler import CompileOptions, compile as tapa_compile
     from ..core import fpga_ring_cluster
     from ..exec import bind_programs, execute
+    from ..obs.trace import Tracer, write_chrome_trace
     from .banks import MemConfig
 
     print(f"devices: {jax.devices()}")
@@ -56,7 +60,8 @@ def main() -> int:
         passes=("normalize_units", "partition", "memory_feedback",
                 "pipeline_interconnect", "schedule")))
     binding = bind_programs(graph)
-    result = execute(design, binding)
+    tracer = Tracer() if args.trace else None
+    result = execute(design, binding, tracer=tracer)
     ideal = execute(design, bind_programs(graph), mem=None)
 
     expected = binding.reference()
@@ -75,8 +80,13 @@ def main() -> int:
     print(f"bank bytes {report.mem_bank_bytes:.0f} == "
           f"delivered {report.mem_delivered_bytes} "
           f"(max measured util {mem.max_utilization:.3f}, "
-          f"mem waits {sum(report.mem_waits.values())}, "
+          f"mem waits {sum(report.task_mem_waits.values())}, "
           f"sweeps {report.sweeps} vs ideal {ideal.report.sweeps})")
+
+    if tracer is not None:
+        doc = write_chrome_trace(tracer, args.trace)
+        print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
+              f"to {args.trace}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -87,7 +97,7 @@ def main() -> int:
             "bit_identical": True,
             "sweeps": report.sweeps,
             "ideal_sweeps": ideal.report.sweeps,
-            "mem_waits": dict(report.mem_waits),
+            "mem_waits": dict(report.task_mem_waits),
             "config": {"banks_per_device": config.banks_per_device,
                        "bank_bandwidth_Bps": config.bank_bandwidth_Bps,
                        "credits": config.credits,

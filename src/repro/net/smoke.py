@@ -14,7 +14,8 @@ Writes the per-link utilization JSON (the CI artifact):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.net.smoke [--rows 2 --cols 2] \
-        [--app stencil] [--out results/net_smoke.json]
+        [--app stencil] [--out results/net_smoke.json] \
+        [--trace results/net_trace.json]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -32,6 +33,8 @@ def main() -> int:
     ap.add_argument("--rows", type=int, default=2)
     ap.add_argument("--cols", type=int, default=2)
     ap.add_argument("--out", default="results/net_smoke.json")
+    ap.add_argument("--trace", default=None,
+                    help="write the fabric run's Chrome trace JSON here")
     args = ap.parse_args()
 
     import jax
@@ -41,6 +44,7 @@ def main() -> int:
     from ..compiler import CompileOptions, compile as tapa_compile
     from ..core import ALVEO_U55C, Cluster, Mesh2D
     from ..exec import bind_programs, execute
+    from ..obs.trace import Tracer, write_chrome_trace
     from . import cluster_fabric
 
     ndev = args.rows * args.cols
@@ -54,7 +58,8 @@ def main() -> int:
         passes=("normalize_units", "partition", "congestion_feedback",
                 "pipeline_interconnect", "schedule")))
     binding = bind_programs(graph)
-    result = execute(design, binding)
+    tracer = Tracer() if args.trace else None
+    result = execute(design, binding, tracer=tracer)
     ideal = execute(design, bind_programs(graph), fabric=None)
 
     got, got_ideal = result.outputs, ideal.outputs
@@ -77,6 +82,11 @@ def main() -> int:
           f"hop-weighted {report.net_hop_weighted_bytes} "
           f"(max util {cong.max_utilization:.3f}, "
           f"sweeps {report.sweeps})")
+
+    if tracer is not None:
+        doc = write_chrome_trace(tracer, args.trace)
+        print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
+              f"to {args.trace}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

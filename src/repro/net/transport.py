@@ -83,6 +83,7 @@ import dataclasses
 import math
 from typing import Dict, List, Mapping, Optional, Set, Tuple
 
+from ..obs.trace import coerce_tracer
 from .fabric import Fabric
 from .faults import (FaultModel, PartitionedFabricError, corrupt_frame,
                      flit_crc, flit_payload)
@@ -244,9 +245,16 @@ class FabricTransport:
 
     def __init__(self, fabric: Fabric, config: Optional[NetConfig] = None,
                  flow_weights: Optional[Mapping[int, float]] = None,
-                 faults: Optional[FaultModel] = None):
+                 faults: Optional[FaultModel] = None,
+                 tracer=None):
         self.fabric = fabric
         self.config = config or NetConfig()
+        # Observability (repro.obs): hot paths guard every emit with
+        # ``tracer.enabled`` so the default NULL_TRACER costs nothing.
+        self.tracer = coerce_tracer(tracer)
+        if self.tracer.enabled:
+            for l in fabric.links:
+                self.tracer.note_link(l.index, max(0, l.src), max(0, l.dst))
         self.counters: List[LinkCounters] = [LinkCounters()
                                              for _ in fabric.links]
         self._budget = [self.config.budget_flits(l.protocol.bandwidth_Bps)
@@ -430,6 +438,8 @@ class FabricTransport:
         c.bytes += bts
         c.flow_flits[m.flow] = c.flow_flits.get(m.flow, 0) + 1
         c.flow_bytes[m.flow] = c.flow_bytes.get(m.flow, 0) + bts
+        if self.tracer.enabled:
+            self.tracer.flit_hop(sweep, li, bts, m.flow, m.mid)
         if escape:
             c.escape_moves += 1
         delay = self._hop_delay[li] + extra_delay
@@ -788,6 +798,9 @@ class FabricTransport:
                     self.faults.backoff_base << min(attempts - 1, 16))
         self._retry[key] = [sweep + delay, attempts, seq]
         self._step_losses += 1
+        if self.tracer.enabled:
+            self.tracer.retransmit(sweep, li, fb, m.flow, outcome)
+            self.tracer.arq_backoff(sweep, li, delay, m.flow, m.mid)
         self._note_failure(li, sweep)
         return "lost"
 
@@ -845,15 +858,18 @@ class FabricTransport:
         if twin >= 0 and twin != li:
             dead.add(twin)
         self.dead_links |= dead
+        if self.tracer.enabled:
+            for dl in sorted(dead):
+                self.tracer.link_death(sweep, dl)
         for mid in sorted(self._messages):
             m = self._messages[mid]
             needs = any(m.route[h] in dead
                         and m.flit_base + m.crossed[h] < m.flits_total
                         for h in range(len(m.route)))
             if needs:
-                self._recall(m)
+                self._recall(m, sweep)
 
-    def _recall(self, m: _Message) -> None:
+    def _recall(self, m: _Message, sweep: int) -> None:
         """Go-Back-N recall to source + re-route (route repair).
 
         Un-delivered flits evaporate from the old route (queued ones
@@ -880,6 +896,12 @@ class FabricTransport:
                 c.retransmit_flits += 1
                 c.flow_bytes[m.flow] -= fb
                 c.flow_flits[m.flow] -= 1
+                if self.tracer.enabled:
+                    # The trace is append-only but repair moves these
+                    # crossings goodput -> retransmit: emit a compensating
+                    # event so trace goodput keeps matching the counters.
+                    self.tracer.flit_reclassify(sweep, li, fb, m.flow,
+                                                m.mid)
         # Credits of flits mid-transit were charged to their *next* hop's
         # link at advance time — release them; the entries themselves die
         # by the epoch bump below.
@@ -907,6 +929,8 @@ class FabricTransport:
         m.crossed = [0] * len(new_route)
         m.epoch += 1
         self.reroutes += 1
+        if self.tracer.enabled:
+            self.tracer.reroute(sweep, m.mid, m.flow, len(new_route))
 
     def arq_books_closed(self) -> bool:
         """Every (link, flow) ARQ stream's books are closed: cumulative

@@ -1,0 +1,43 @@
+"""`repro.obs` — observability for the whole stack.
+
+Three pieces, one thread-through:
+
+* :mod:`repro.obs.trace` — sweep-granular typed events from executor,
+  transport, memory, tenants, and chaos, with a Chrome/Perfetto exporter
+  (``to_chrome_trace``) and a zero-overhead disabled default
+  (:data:`NULL_TRACER`);
+* :mod:`repro.obs.metrics` — the unified ``layer.object.metric``
+  registry subsuming every scattered counter, with exact-consistency
+  asserts against the legacy report fields;
+* :mod:`repro.obs.critpath` — post-hoc critical-path attribution
+  decomposing the measured makespan into compute / network / memory /
+  fault-recovery sweeps, and the predicted-vs-measured makespan table.
+
+Quickstart::
+
+    from repro.obs import Tracer, analyze, write_chrome_trace
+    tr = Tracer()
+    result = execute(design, inputs=..., tracer=tr)
+    crit = analyze(tr, sweeps=result.report.sweeps)
+    print(crit.decomposition())            # exact sweep buckets
+    write_chrome_trace(tr, "run.json")     # open in chrome://tracing
+"""
+from .critpath import (CritPath, TaskAttribution, analyze, format_table,
+                       makespan_row)
+from .metrics import (MetricsRegistry, assert_registry_consistent,
+                      assert_trace_report_consistent, from_report,
+                      from_trace, tenant_metrics)
+from .trace import (EVENT_FIELDS, FAULT_KINDS, NULL_TRACER, NullTracer,
+                    Tracer, coerce_tracer, to_chrome_trace,
+                    validate_chrome_trace, write_chrome_trace)
+
+__all__ = [
+    "CritPath", "TaskAttribution", "analyze", "format_table",
+    "makespan_row",
+    "MetricsRegistry", "assert_registry_consistent",
+    "assert_trace_report_consistent", "from_report", "from_trace",
+    "tenant_metrics",
+    "EVENT_FIELDS", "FAULT_KINDS", "NULL_TRACER", "NullTracer", "Tracer",
+    "coerce_tracer", "to_chrome_trace", "validate_chrome_trace",
+    "write_chrome_trace",
+]

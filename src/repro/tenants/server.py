@@ -51,6 +51,7 @@ from ..exec import ExecutionResult
 from ..exec.executor import DeadlockError, ExecutionState
 from ..net.fabric import Fabric
 from ..net.transport import FabricTransport, NetConfig
+from ..obs.trace import coerce_tracer
 from ..runtime.fault import FailureInjector
 from .slo import SLO
 
@@ -102,6 +103,11 @@ class FlowMemory:
     @property
     def active(self) -> bool:
         return self.inner.flow_active(self.flow)
+
+    def bank_id(self, device: int, bank: int) -> int:
+        """Flat *fabric* bank id of this tenant's logical (device, bank)
+        — trace events name physical banks, not logical ones."""
+        return self.inner.bank_id(self.device_map[device], bank)
 
     def submit(self, chan_index: int, device: int, bank: int,
                nbytes: int, sweep: int) -> int:
@@ -214,7 +220,7 @@ class TenantServer:
 
     def __init__(self, fabric: Fabric, tenants: Sequence[Tenant], *,
                  net_config: Optional[NetConfig] = None,
-                 mem_config=None):
+                 mem_config=None, tracer=None):
         if not tenants:
             raise ValueError("need at least one tenant")
         names = [t.name for t in tenants]
@@ -222,13 +228,19 @@ class TenantServer:
             raise ValueError(f"duplicate tenant names: {names}")
         self.fabric = fabric
         self.net_config = net_config or NetConfig()
+        # Observability (repro.obs): one tracer spans the shared substrate
+        # and every tenant's ExecutionState; each incarnation's events carry
+        # its flow id, so per-tenant attribution survives re-admission.
+        self.tracer = coerce_tracer(tracer)
         self.transport = FabricTransport(
             fabric, self.net_config,
-            flow_weights={i: t.slo.weight for i, t in enumerate(tenants)})
+            flow_weights={i: t.slo.weight for i, t in enumerate(tenants)},
+            tracer=self.tracer)
         self.memsys = None
         if mem_config is not None:
             from ..mem.banks import MemorySystem
-            self.memsys = MemorySystem(fabric.num_devices, mem_config)
+            self.memsys = MemorySystem(fabric.num_devices, mem_config,
+                                       tracer=self.tracer)
         self.records: List[TenantRecord] = []
         self._net_bases: List[int] = []    # per-record global channel base
         self._mem_bases: List[int] = []
@@ -260,9 +272,13 @@ class TenantServer:
             transport=net_view,
             memsys=mem_view,
             mem=None,
-            device_map=tenant.device_map)
+            device_map=tenant.device_map,
+            tracer=self.tracer,
+            trace_flow=flow)
         rec = TenantRecord(name=tenant.name, flow=flow, tenant=tenant,
                            state=state, start_sweep=start_sweep)
+        if self.tracer.enabled:
+            self.tracer.tenant_admit(start_sweep, flow, tenant.name)
         if recovered_from is not None:
             recovered_from.recovered_as = tenant.name
         self.records.append(rec)
@@ -292,6 +308,9 @@ class TenantServer:
             r.status = "killed"
             r.killed_at = sweep
             r.state = None             # discard the torn-down execution
+            if self.tracer.enabled:
+                self.tracer.tenant_cancel(sweep, r.flow, r.name,
+                                          f"device_kill:{kill.device}")
         return victims
 
     def _readmit(self, victim: TenantRecord, kill: DeviceKill,
@@ -392,6 +411,9 @@ class TenantServer:
                             and sweep >= rec.start_sweep):
                         save_snapshot(rec.state, sweep,
                                       rec.tenant.checkpoint_dir)
+                        if self.tracer.enabled:
+                            self.tracer.barrier(sweep, f"step_{sweep}",
+                                                rec.flow)
             running = [r for r in self.records if r.status == "running"]
             if not running:
                 break
@@ -433,6 +455,13 @@ class TenantServer:
         return ServeOutcome(records=self.records, sweeps=sweep + 1,
                             wall_time_s=wall,
                             conservation=self.conservation())
+
+    # -- observability -------------------------------------------------------
+    def metrics(self):
+        """``tenant.flow.*`` series for every incarnation this server ran
+        (:func:`repro.obs.metrics.tenant_metrics`)."""
+        from ..obs.metrics import tenant_metrics
+        return tenant_metrics(self)
 
     # -- the exact per-tenant accounting identity ----------------------------
     def conservation(self) -> Dict[str, Any]:

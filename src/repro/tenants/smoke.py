@@ -28,7 +28,8 @@ Writes the per-tenant latency/goodput JSON (the CI artifact):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.tenants.smoke \
-        [--kill-sweep 2] [--out results/serve_smoke.json]
+        [--kill-sweep 2] [--out results/serve_smoke.json] \
+        [--trace results/serve_trace.json]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -43,6 +44,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kill-sweep", type=int, default=2)
     ap.add_argument("--out", default="results/serve_smoke.json")
+    ap.add_argument("--trace", default=None,
+                    help="write the co-run's Chrome trace JSON here")
     args = ap.parse_args()
 
     import jax
@@ -54,6 +57,7 @@ def main() -> int:
     from ..exec import bind_programs, execute
     from ..net import cluster_fabric
     from ..net.transport import NetConfig
+    from ..obs.trace import Tracer, write_chrome_trace
     from . import (SLO, DeviceKill, Tenant, TenantServer, bit_identical,
                    isolation_check)
 
@@ -85,7 +89,9 @@ def main() -> int:
         ]
 
     # -- serve 1: clean co-run over the shared fabric ------------------------
-    server = TenantServer(fabric, tenants(), net_config=net_config)
+    tracer = Tracer() if args.trace else None
+    server = TenantServer(fabric, tenants(), net_config=net_config,
+                          tracer=tracer)
     out = server.run()
     for n in specs:
         rec = out.record(n)
@@ -146,6 +152,11 @@ def main() -> int:
               f"goodput {row['goodput_Bps']:.3e} B/s")
     print(f"fault run: killed at sweep {killed.killed_at}, recovered as "
           f"{killed.recovered_as} in {fout.sweeps} sweeps, parity {err:.1e}")
+
+    if tracer is not None:
+        doc = write_chrome_trace(tracer, args.trace)
+        print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
+              f"to {args.trace}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -231,7 +231,7 @@ def test_lossy_run_is_bit_identical_with_agreement(stencil4):
 def test_faults_none_report_has_no_fault_fields(stencil4):
     _, _, baseline = stencil4
     assert baseline.report.net_goodput_hop_bytes is None
-    assert baseline.report.net_retransmit_bytes == 0
+    assert baseline.report.net_retransmit_bytes_total == 0
 
 
 # ---------------------------------------------------------------------------

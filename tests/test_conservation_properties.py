@@ -189,6 +189,179 @@ def test_bank_conservation_fixed():
     check_bank_conservation(1, 32, 1, 32, [(0, 0, 1)], 1)
 
 
+# ---------------------------------------------------------------------------
+# P4 — trace-event byte conservation (repro.obs): over random topology ×
+# traffic × fault configs, summed trace-event bytes equal the per-link
+# goodput/retransmit counters and the per-bank byte counters, as exact
+# integers (no tolerance) — the route-repair reclassification included.
+# ---------------------------------------------------------------------------
+
+def check_trace_net_conservation(topo_idx, payloads, mtu, credits, budget,
+                                 drop, corrupt, seed, down=()):
+    from repro.net.faults import FaultModel, LinkFaults
+    from repro.obs.trace import (Tracer, to_chrome_trace,
+                                 validate_chrome_trace)
+    topo = _TOPOS[topo_idx % len(_TOPOS)]
+    n = topo.num_devices
+    fab = build_fabric(topo)
+    fm = None
+    if drop or corrupt or down:
+        # fail_threshold=None: lossy links retry forever instead of dying,
+        # so any topology (including cut-through chains) stays routable.
+        fm = FaultModel(seed=seed,
+                        default=LinkFaults(drop=drop, corrupt=corrupt,
+                                           down=tuple(down)),
+                        fail_threshold=None)
+    tracer = Tracer()
+    tr = FabricTransport(fab, _net_cfg(mtu, credits, budget), faults=fm,
+                         tracer=tracer)
+    submitted = 0
+    for ch, (s, d, nb) in enumerate(payloads):
+        s, d = s % n, d % n
+        if s == d:
+            continue
+        tr.submit(ch, s, d, nb, 0)
+        submitted += nb
+    tr.drain(0)
+    assert tr.total_delivered_bytes == submitted
+    # Per-link, exact ints: Σ flit_hop − Σ flit_reclassify == goodput,
+    # Σ retransmit + Σ flit_reclassify == wasted wire bytes.
+    goodput = tracer.link_goodput_bytes()
+    retx = {}
+    for e in tracer.iter_kind("retransmit"):
+        retx[e[2]] = retx.get(e[2], 0) + e[3]
+    for e in tracer.iter_kind("flit_reclassify"):
+        retx[e[2]] = retx.get(e[2], 0) + e[3]
+    for li, c in enumerate(tr.counters):
+        assert goodput.get(li, 0) == int(c.bytes), f"link {li} goodput"
+        assert retx.get(li, 0) == int(c.retransmit_bytes), \
+            f"link {li} retransmit"
+    validate_chrome_trace(to_chrome_trace(tracer))
+
+
+def check_trace_bank_conservation(bpd, bandwidth_MBps, credits, burst,
+                                  chan_specs, count):
+    import jax.numpy as jnp
+
+    from repro.obs.trace import Tracer
+
+    cfg = MemConfig(banks_per_device=bpd,
+                    bank_bandwidth_Bps=bandwidth_MBps * 1e6,
+                    credits=credits, burst_bytes=burst)
+    ndev = max(d for d, _, _ in chan_specs) + 1
+    tracer = Tracer()
+    ms = MemorySystem(ndev, cfg, tracer=tracer)
+    chans = []
+    for ci, (dev, bank, elems) in enumerate(chan_specs):
+        toks = [jnp.full((elems,), float(ci * 100 + t))
+                for t in range(count)]
+        chans.append(AsyncMemChannel(ci, f"t{ci}", "x", toks, count,
+                                     device=dev, bank=bank, memsys=ms,
+                                     tracer=tracer))
+    sweep = 0
+    while any(c.stats.consumed < c.count for c in chans):
+        for c in chans:
+            c.pump(sweep)
+        for c in chans:
+            if c.stats.consumed < c.count and c.response_ready(sweep):
+                c.consume(sweep)
+        for rid, ci in ms.step(sweep):
+            chans[ci].on_complete(rid, sweep)
+        sweep += 1
+        assert sweep < 50_000, "memory system failed to make progress"
+    # Per-bank, exact ints: Σ bank_burst bytes == served bytes; one
+    # mem_issue event per issued request carrying the requested bytes.
+    bank_bytes = tracer.bank_bytes()
+    for b in range(ndev * bpd):
+        assert bank_bytes.get(b, 0) == int(ms.counters[b].bytes), \
+            f"bank {b} bytes"
+    issues = list(tracer.iter_kind("mem_issue"))
+    assert len(issues) == sum(c.stats.issued for c in chans)
+    assert sum(e[6] for e in issues) == \
+        sum(c.stats.requested_bytes for c in chans)
+
+
+@settings(max_examples=25, deadline=None)
+@given(topo_idx=st.integers(min_value=0, max_value=len(_TOPOS) - 1),
+       payloads=st.lists(
+           st.tuples(st.integers(min_value=0, max_value=7),
+                     st.integers(min_value=0, max_value=7),
+                     st.integers(min_value=1, max_value=5000)),
+           min_size=1, max_size=6),
+       mtu=st.sampled_from([32, 64, 256]),
+       credits=st.integers(min_value=1, max_value=6),
+       budget=st.integers(min_value=1, max_value=4),
+       drop=st.sampled_from([0.0, 0.1, 0.3]),
+       corrupt=st.sampled_from([0.0, 0.1]),
+       seed=st.integers(min_value=0, max_value=999),
+       down=st.sampled_from([(), ((0, 3),), ((2, 6),)]))
+def test_trace_net_conservation_property(topo_idx, payloads, mtu, credits,
+                                         budget, drop, corrupt, seed, down):
+    check_trace_net_conservation(topo_idx, payloads, mtu, credits, budget,
+                                 drop, corrupt, seed, down)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bpd=st.integers(min_value=1, max_value=4),
+       bandwidth_MBps=st.sampled_from([32, 64, 256]),
+       credits=st.integers(min_value=1, max_value=6),
+       burst=st.sampled_from([32, 64, 256]),
+       chan_specs=st.lists(
+           st.tuples(st.integers(min_value=0, max_value=2),
+                     st.integers(min_value=0, max_value=7),
+                     st.integers(min_value=1, max_value=96)),
+           min_size=1, max_size=6),
+       count=st.integers(min_value=1, max_value=5))
+def test_trace_bank_conservation_property(bpd, bandwidth_MBps, credits,
+                                          burst, chan_specs, count):
+    check_trace_bank_conservation(bpd, bandwidth_MBps, credits, burst,
+                                  chan_specs, count)
+
+
+def test_trace_net_conservation_fixed():
+    check_trace_net_conservation(1, [(0, 2, 1234), (1, 3, 999),
+                                     (3, 0, 100)], 100, 4, 2,
+                                 0.0, 0.0, 0)
+    check_trace_net_conservation(1, [(0, 2, 2000), (2, 0, 4999)], 32, 2, 1,
+                                 0.3, 0.1, 7, down=((0, 3),))
+
+
+def test_trace_net_conservation_link_death_reclassifies():
+    """A permanent link death mid-transfer forces route repair: the
+    reclassified crossings keep both trace identities exact on a ring."""
+    from repro.net.faults import FaultModel, LinkFaults
+    from repro.obs.trace import Tracer
+    fab = build_fabric(Ring(4))
+    dead = {li for li, l in enumerate(fab.links)
+            if (l.src, l.dst) == (0, 1)}
+    fm = FaultModel(seed=3,
+                    links={li: LinkFaults(down=((2, None),))
+                           for li in dead},
+                    fail_threshold=3)
+    tracer = Tracer()
+    tr = FabricTransport(fab, _net_cfg(64, 2, 1), faults=fm, tracer=tracer)
+    tr.submit(0, 0, 1, 4000, 0)
+    tr.drain(0)
+    assert tr.total_delivered_bytes == 4000
+    assert tracer.count("link_death") >= 1
+    assert tracer.count("reroute") >= 1
+    goodput = tracer.link_goodput_bytes()
+    retx = {}
+    for e in tracer.iter_kind("retransmit"):
+        retx[e[2]] = retx.get(e[2], 0) + e[3]
+    for e in tracer.iter_kind("flit_reclassify"):
+        retx[e[2]] = retx.get(e[2], 0) + e[3]
+    for li, c in enumerate(tr.counters):
+        assert goodput.get(li, 0) == int(c.bytes)
+        assert retx.get(li, 0) == int(c.retransmit_bytes)
+
+
+def test_trace_bank_conservation_fixed():
+    check_trace_bank_conservation(2, 64, 2, 64,
+                                  [(0, 0, 48), (0, 0, 16), (1, 1, 96)], 3)
+    check_trace_bank_conservation(1, 32, 1, 32, [(0, 0, 1)], 1)
+
+
 def test_hypothesis_shim_declares_itself():
     """The compat import must resolve either way — and when hypothesis is
     absent the @given tests above report SKIPPED, not errors."""

@@ -259,7 +259,7 @@ def test_hot_bank_diverges_offered_vs_achieved():
     assert measured.max_utilization <= 1.0 + 1e-12
     assert measured.bank(0, 0).saturated_sweeps > 0
     assert measured.bank(0, 1).bytes == 0        # the other bank idles
-    assert sum(rep.mem_waits.values()) > 0       # pipeline genuinely stalled
+    assert sum(rep.task_mem_waits.values()) > 0       # pipeline genuinely stalled
     # Both reports still account the same total traffic per step vs run.
     assert measured.total_bytes == projected.total_bytes * rep.iterations
 
@@ -366,9 +366,9 @@ def test_apps_bit_identical_through_banks(app):
     assert rep.mem_contention.max_utilization <= 1.0 + 1e-12
     # The bank path costs real sweeps; the ideal path never waits on memory.
     assert rep.sweeps > ideal.report.sweeps
-    assert sum(rep.mem_waits.values()) > 0
+    assert sum(rep.task_mem_waits.values()) > 0
     assert not ideal.report.mem_channels or \
-        sum(ideal.report.mem_waits.values()) == 0
+        sum(ideal.report.task_mem_waits.values()) == 0
 
 
 def test_mem_reads_binding_validation():
