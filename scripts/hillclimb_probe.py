@@ -3,28 +3,67 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Hillclimb probe: lower one cell, print the top collectives by effective
 wire bytes (trip-count-corrected) with op attribution, plus roofline terms.
 
-  PYTHONPATH=src python scripts/hillclimb_probe.py <arch> <shape> [multi]
+All measurements land in a :class:`repro.obs.MetricsRegistry` under the
+``launch.collective.* / launch.memory.*`` namespace — the printout is a
+view over the registry, and ``--json`` dumps the same registry document
+(``registry.to_json()``) for machine consumers.
+
+  PYTHONPATH=src python scripts/hillclimb_probe.py <arch> <shape> \\
+      [multi] [<microbatches>] [--json out.json]
 """
-import sys
+import argparse
+import json
+import re
 
 from repro.configs import get_arch, input_specs
 from repro.configs.base import SHAPES
 from repro.launch import hlo_analysis, steps
-from repro.launch.dryrun import run_cell
 from repro.launch.mesh import make_production_mesh
 from repro.launch.plan import make_plan
+from repro.obs import MetricsRegistry
+
+
+def probe_registry(colls, agg, ma) -> MetricsRegistry:
+    """Fold one lowered cell's collectives + memory summary into the
+    unified registry namespace."""
+    reg = MetricsRegistry()
+    for o in colls:
+        eff = o.bytes_per_exec * o.trip_mult * (
+            2 if o.kind == "all-reduce" else 1)
+        net = "dcn" if o.is_dcn else "ici"
+        reg.counter_add("launch.collective.wire_bytes", int(eff),
+                        kind=o.kind, net=net)
+        reg.counter_add("launch.collective.ops", 1, kind=o.kind, net=net)
+        reg.observe("launch.collective.op_wire_bytes", float(eff))
+    for name, val in (("ici_bytes", agg["ici"]),
+                      ("ici_bytes_tpu_adj", agg["ici_tpu_adj"]),
+                      ("dcn_bytes", agg["dcn"]),
+                      ("dcn_bytes_tpu_adj", agg["dcn_tpu_adj"])):
+        reg.counter_add(f"launch.collective.{name}", int(val))
+    reg.gauge_set("launch.memory.peak_bytes", float(ma["peak_bytes"]))
+    reg.gauge_set("launch.memory.argument_bytes",
+                  float(ma["argument_bytes"]))
+    return reg
 
 
 def main():
-    arch, shape = sys.argv[1], sys.argv[2]
-    multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
-    mb_override = int(sys.argv[4]) if len(sys.argv) > 4 else None
-    cfg = get_arch(arch).full()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("rest", nargs="*",
+                    help="'multi' and/or a microbatch override")
+    ap.add_argument("--json", default=None,
+                    help="dump the probe's MetricsRegistry document here")
+    args = ap.parse_args()
+    multi = "multi" in args.rest
+    mb_override = next((int(a) for a in args.rest if a.isdigit()), None)
+
+    cfg = get_arch(args.arch).full()
     mesh = make_production_mesh(multi_pod=multi)
-    cell = SHAPES[shape]
-    plan = make_plan(arch, cfg, shape,
+    cell = SHAPES[args.shape]
+    plan = make_plan(args.arch, cfg, args.shape,
                      num_pods=mesh.shape.get("pod", 1))
-    specs = input_specs(cfg, shape)
+    specs = input_specs(cfg, args.shape)
     mb = mb_override or plan.microbatches
     if cell.kind == "train":
         lowered = steps.lower_train(cfg, mesh, specs,
@@ -41,10 +80,17 @@ def main():
         vocab=cfg.vocab, chips_per_pod=256,
         microbatches=mb if cell.kind == "train" else 1)
     agg = hlo_analysis.collective_bytes(colls)
-    print(f"total ici={agg['ici']/2**30:.2f} GiB "
-          f"(tpu-adj {agg['ici_tpu_adj']/2**30:.2f}) "
-          f"dcn={agg['dcn']/2**30:.2f} GiB "
-          f"(tpu-adj {agg['dcn_tpu_adj']/2**30:.2f}) over {len(colls)} ops")
+    ma = hlo_analysis.memory_summary(comp)
+    reg = probe_registry(colls, agg, ma)
+
+    # The printout is a view over the registry, not a parallel tally.
+    print(f"total ici={reg.total('launch.collective.ici_bytes')/2**30:.2f} "
+          f"GiB (tpu-adj "
+          f"{reg.total('launch.collective.ici_bytes_tpu_adj')/2**30:.2f}) "
+          f"dcn={reg.total('launch.collective.dcn_bytes')/2**30:.2f} GiB "
+          f"(tpu-adj "
+          f"{reg.total('launch.collective.dcn_bytes_tpu_adj')/2**30:.2f}) "
+          f"over {reg.total('launch.collective.ops')} ops")
     ranked = sorted(colls, key=lambda o: -o.bytes_per_exec * o.trip_mult *
                     (2 if o.kind == "all-reduce" else 1))
     for o in ranked[:14]:
@@ -54,13 +100,20 @@ def main():
               f"{list(o.shape)} x{o.trip_mult:.0f} depth={o.while_depth} "
               f"dcn={o.is_dcn}")
         # op_name metadata tail for attribution
-        import re
         m = re.search(r'op_name="([^"]+)"', o.line)
         if m:
             print(f"           └ {m.group(1)[-110:]}")
-    ma = hlo_analysis.memory_summary(comp)
-    print(f"peak={ma['peak_bytes']/2**30:.2f} GiB "
-          f"(args {ma['argument_bytes']/2**30:.2f})")
+    print(f"peak={reg.value('launch.memory.peak_bytes', 0)/2**30:.2f} GiB "
+          f"(args "
+          f"{reg.value('launch.memory.argument_bytes', 0)/2**30:.2f})")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"format": "hillclimb-probe/v1", "arch": args.arch,
+                       "shape": args.shape,
+                       "metrics": reg.to_json()}, f, indent=2)
+            f.write("\n")
+        print(f"wrote registry document to {args.json}")
 
 
 if __name__ == "__main__":

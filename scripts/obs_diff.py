@@ -1,0 +1,79 @@
+"""Metric regression gate: diff a fresh obs-metrics document against the
+committed baseline.  Exit 0 when every app is within its tolerances,
+exit 1 on unexplained drift (the CI ``obs-diff`` step fails the build).
+
+Tolerances and ignore lists live **in the baseline file** — a PR that
+legitimately shifts a metric updates ``results/obs_baseline.json`` in
+the same diff a reviewer sees.
+
+  PYTHONPATH=src python scripts/obs_diff.py \\
+      --baseline results/obs_baseline.json \\
+      --current results/obs_metrics.json \\
+      [--out results/obs_diff.json] [--update-baseline]
+
+``--update-baseline`` rewrites the baseline from the current document
+(keeping its tolerances/ignores) instead of gating — the one-command
+path for intentional metric changes.
+"""
+import argparse
+import json
+import sys
+
+from repro.obs.diff import (BASELINE_FORMAT, METRICS_FORMAT,
+                            diff_against_baseline, load_json)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="results/obs_baseline.json")
+    ap.add_argument("--current", default="results/obs_metrics.json")
+    ap.add_argument("--out", default=None,
+                    help="write the obs-diff/v1 report JSON here")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline's apps from --current "
+                         "(keeps its tolerances and ignore list)")
+    args = ap.parse_args()
+
+    baseline = load_json(args.baseline)
+    current = load_json(args.current)
+    if current.get("format") != METRICS_FORMAT:
+        print(f"error: {args.current} is not an {METRICS_FORMAT} "
+              f"document (format={current.get('format')!r})",
+              file=sys.stderr)
+        return 2
+    apps = current["apps"]
+
+    if args.update_baseline:
+        baseline["format"] = BASELINE_FORMAT
+        baseline["apps"] = apps
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"rewrote {args.baseline} from {args.current} "
+              f"({len(apps)} apps)")
+        return 0
+
+    diffs = diff_against_baseline(baseline, apps)
+    ok = all(d.ok for d in diffs.values())
+    for app in sorted(diffs):
+        print(f"[{app}] {diffs[app].format()}")
+    extra = sorted(set(apps) - set(baseline.get("apps", {})))
+    if extra:
+        print(f"note: apps not in baseline (not gated): {extra}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"format": "obs-diff-report/v1", "ok": ok,
+                       "apps": {a: d.to_json() for a, d in diffs.items()}},
+                      f, indent=2)
+            f.write("\n")
+        print(f"wrote diff report to {args.out}")
+
+    print("OBS_DIFF_OK" if ok
+          else "OBS_DIFF_DRIFT: metrics moved outside baseline tolerances "
+               "(update results/obs_baseline.json if intentional)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,6 +17,11 @@ bit-identity reference and the sweep floor.  :func:`run_scenario` then:
   acceptance criterion — a kill costs the sweeps since the barrier, not a
   re-run).
 
+:func:`run_tenant_cell` adds the **per-tenant** chaos cells: two weighted
+tenants co-run over one shared ring under the scenario's faults, and the
+per-tenant cost ledger (:mod:`repro.obs.attrib`) must sum bit-exactly to
+the global counters — with kill cells charging the victim's lineage only.
+
 Everything is deterministic — seeded rngs, no wall clock — so a failing
 cell is replayable from its JSON record alone.
 """
@@ -138,6 +143,99 @@ def run_scenario(app: str, scenario: ChaosScenario, *, ndev: int = 4,
         "agreement": agree,
         "ok": True,
     })
+    return cell
+
+
+_TENANT_COMPILED: Dict[str, Tuple[Any, Any, Any]] = {}
+
+
+def compile_tenants(app: str = "stencil"):
+    """(specs, graphs, designs) for two independently compiled 2-device
+    tenants of ``app`` — memoized per process like :func:`compile_app`."""
+    if app not in _TENANT_COMPILED:
+        from ..apps import APPS
+        from ..compiler import CompileOptions, compile as tapa_compile
+        from ..core import fpga_ring_cluster
+        opts = CompileOptions(balance_kind="LUT", balance_tol=0.8,
+                              exact_limit=1500, floorplan_devices=(0,))
+        specs = {"a": {"seed": 0}, "b": {"seed": 7}}
+        graphs = {n: APPS[app].build_graph(2) for n in specs}
+        designs = {n: tapa_compile(graphs[n], fpga_ring_cluster(2), opts)
+                   for n in specs}
+        _TENANT_COMPILED[app] = (specs, graphs, designs)
+    return _TENANT_COMPILED[app]
+
+
+def run_tenant_cell(scenario: ChaosScenario, *, app: str = "stencil",
+                    ndev: int = 4) -> Dict[str, Any]:
+    """One **per-tenant** chaos cell: two weighted tenants co-run over one
+    shared ``ndev``-ring under the scenario's link faults (plus a
+    :class:`~repro.tenants.DeviceKill` of tenant ``a``'s second device
+    when ``scenario.kill_sweep`` is set).  Asserts the attribution
+    tentpole on the faulted co-run:
+
+    * the per-tenant cost ledger sums **bit-exactly** to the global
+      transport / memory / critical-path / registry totals;
+    * on kill cells over clean links, the victim's lineage carries every
+      cancelled byte and restore sweep while its peer is charged exactly
+      zero fault cost (``assert_peers_uncharged``);
+    * surviving tenants stay bit-identical to their clean co-run.
+    """
+    from ..core import fpga_ring_cluster
+    from ..net import cluster_fabric
+    from ..net.transport import NetConfig
+    from ..obs import (Tracer, analyze, assert_ledger_consistent,
+                       assert_peers_uncharged, build_ledger,
+                       substrate_metrics)
+    from ..tenants import SLO, DeviceKill, Tenant, TenantServer, \
+        bit_identical
+    specs, graphs, designs = compile_tenants(app)
+
+    def tenants():
+        return [Tenant("a", designs["a"], device_map=[0, 2],
+                       slo=SLO(1e-3, weight=2.0), inputs=specs["a"]),
+                Tenant("b", designs["b"], device_map=[0, 1],
+                       slo=SLO(1e-3, weight=1.0), inputs=specs["b"])]
+
+    clean = TenantServer(cluster_fabric(fpga_ring_cluster(ndev)),
+                         tenants()).run()
+    tracer = Tracer()
+    server = TenantServer(cluster_fabric(fpga_ring_cluster(ndev)),
+                          tenants(),
+                          net_config=NetConfig(faults=scenario.fault_model()),
+                          tracer=tracer)
+    faults = [] if scenario.kill_sweep is None else \
+        [DeviceKill(device=2, sweep=scenario.kill_sweep)]
+    out = server.run(faults=faults)
+    crit = analyze(tracer, sweeps=out.sweeps)
+    ledger = build_ledger(server, crit=crit)
+    assert_ledger_consistent(ledger, server, crit=crit,
+                             registry=substrate_metrics(server))
+    by = ledger.by_lineage()
+    cell: Dict[str, Any] = {
+        "app": app, "scenario": scenario.name, "seed": scenario.seed,
+        "kind": "tenant", "sweeps": out.sweeps,
+        "clean_sweeps": clean.sweeps,
+        "ledger": ledger.to_json(),
+    }
+    if faults:
+        assert out.record("a").status == "killed", \
+            f"{scenario.name}: kill at sweep {scenario.kill_sweep} missed"
+        assert by["a"]["cancelled_bytes"] > 0
+        assert by["a"]["restore_sweeps"] > 0
+        if not scenario.lossy:
+            # Clean links: the only fault cost is the kill, and it lands
+            # on the victim's lineage alone.
+            assert_peers_uncharged(ledger, ["a"])
+        survivors = ["b"]
+    else:
+        survivors = ["a", "b"]
+    for n in survivors:
+        assert out.record(n).status == "done", f"tenant {n} never finished"
+        assert bit_identical(out.record(n).result.outputs,
+                             clean.record(n).result.outputs), \
+            f"{scenario.name}: tenant {n} diverged from the clean co-run"
+    cell["ok"] = True
     return cell
 
 

@@ -5,7 +5,10 @@ One drop-rate tier, one finite link outage, one permanent link death
 4-FPGA emulated ring.  Every cell asserts bit-identity against the
 fault-free baseline, full measured-vs-predicted agreement (including the
 repair-aware goodput conservation), seeded replayability, and the
-barrier-bounded restore cost.  Writes the fault-matrix JSON artifact.
+barrier-bounded restore cost.  Two **per-tenant** cells then co-run two
+weighted tenants over one shared ring — a lossy fabric and a device kill
+— asserting the cost ledger sums bit-exactly and the kill charges the
+victim's lineage only.  Writes the fault-matrix JSON artifact.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.chaos.smoke \
@@ -60,6 +63,21 @@ def main() -> int:
         )
     matrix = run_matrix(apps, scenarios, verbose=True)
     assert matrix["ok"]
+
+    # Per-tenant chaos cells: the attribution tentpole under faults — a
+    # lossy shared fabric (ledger sums bit-exactly, both tenants charged)
+    # and a clean-link device kill (victim's lineage pays, peer pays zero).
+    from .runner import run_tenant_cell
+    tenant_cells = []
+    for sc in (ChaosScenario("tenant-drop", drop=0.05, corrupt=0.02,
+                             seed=5),
+               ChaosScenario("tenant-kill", kill_sweep=2, seed=17)):
+        cell = run_tenant_cell(sc)
+        tenant_cells.append(cell)
+        print(f"  [tenants × {sc.name}] sweeps {cell['sweeps']} "
+              f"(clean {cell['clean_sweeps']}), ledger exact")
+    matrix["tenant_cells"] = tenant_cells
+    assert all(c["ok"] for c in tenant_cells)
 
     if args.trace:
         # The observability acceptance cell: trace the drop-tier scenario

@@ -79,6 +79,7 @@ class BankCounters:
     # lands in exactly one flow bucket, so Σ_flow == total exactly.
     flow_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     flow_bursts: Dict[int, int] = dataclasses.field(default_factory=dict)
+    flow_requests: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -146,6 +147,7 @@ class MemorySystem:
         self._queues[bid].append(rid)
         c = self.counters[bid]
         c.requests += 1
+        c.flow_requests[flow] = c.flow_requests.get(flow, 0) + 1
         self.total_requested_bytes += int(nbytes)
         queued = sum(self._requests[r].bursts_total - self._requests[r].served
                      for r in self._queues[bid])
@@ -254,6 +256,18 @@ class MemorySystem:
         return completed
 
     # -- reporting ----------------------------------------------------------
+    def flow_mem_totals(self, flow: int) -> Dict[str, int]:
+        """Σ over banks of one flow's served bytes/bursts/requests — the
+        memory side of the per-tenant cost ledger (:mod:`repro.obs.attrib`).
+        Summing each entry over every flow recovers the matching global
+        bank counter exactly (integer equality)."""
+        out = {"bytes": 0, "bursts": 0, "requests": 0}
+        for c in self.counters:
+            out["bytes"] += c.flow_bytes.get(flow, 0)
+            out["bursts"] += c.flow_bursts.get(flow, 0)
+            out["requests"] += c.flow_requests.get(flow, 0)
+        return out
+
     def utilization(self, bank_id: int, flow: Optional[int] = None) -> float:
         """Served bursts over offered burst-slots (0 when never stepped) —
         achieved throughput, <= 1 by construction.  With ``flow``, only

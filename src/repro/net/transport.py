@@ -148,10 +148,24 @@ class LinkCounters:
     reorder_delays: int = 0        # frames delivered late (reorder fault)
     held_frames: int = 0           # in-sequence gaps buffered at the receiver
     arq_stalls: int = 0            # new transmissions refused: window full
+    backoff_sweeps: int = 0        # Σ scheduled retransmission backoff delays
     # Per-flow attribution (multi-tenant accounting): every crossed flit
     # lands in exactly one flow bucket, so sums are exact at every sweep.
     flow_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     flow_flits: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Per-(link, flow) fault attribution: every wasted attempt, recall
+    # reclassification, scheduled backoff sweep, and window stall belongs
+    # to exactly one flow's message, so ``Σ_flow flow_retransmit_bytes ==
+    # retransmit_bytes`` (and likewise for each sibling) holds exactly at
+    # every sweep — the identity the per-tenant cost ledger
+    # (:mod:`repro.obs.attrib`) is built on.
+    flow_retransmit_bytes: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    flow_retransmit_flits: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    flow_backoff_sweeps: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    flow_arq_stalls: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -281,6 +295,9 @@ class FabricTransport:
         self.total_delivered_bytes = 0
         self.cancelled_messages = 0
         self.cancelled_bytes = 0
+        # Per-flow cancelled payload bytes (device-kill teardown): lets the
+        # cost ledger charge abandoned in-flight work to the killed tenant.
+        self.cancelled_flow_bytes: Dict[int, int] = {}
         # Fault / ARQ / repair state (untouched when faults is None).
         # The model can arrive either as a constructor arg or riding on
         # NetConfig (so callers that only plumb a config need no new API).
@@ -755,6 +772,8 @@ class FabricTransport:
             # or the window could never drain).
             if arq.unacked >= self.faults.arq_window:
                 c.arq_stalls += 1
+                c.flow_arq_stalls[m.flow] = \
+                    c.flow_arq_stalls.get(m.flow, 0) + 1
                 return "skip"
             seq = arq.tx
             arq.tx += 1
@@ -787,6 +806,10 @@ class FabricTransport:
         # exponential backoff, and the link-death streak all tick.
         c.retransmit_flits += 1
         c.retransmit_bytes += fb
+        c.flow_retransmit_flits[m.flow] = \
+            c.flow_retransmit_flits.get(m.flow, 0) + 1
+        c.flow_retransmit_bytes[m.flow] = \
+            c.flow_retransmit_bytes.get(m.flow, 0) + fb
         if outcome == "drop":
             c.drops += 1
         elif outcome == "down":
@@ -796,6 +819,9 @@ class FabricTransport:
         attempts = st[1] + 1
         delay = min(self.faults.backoff_cap,
                     self.faults.backoff_base << min(attempts - 1, 16))
+        c.backoff_sweeps += delay
+        c.flow_backoff_sweeps[m.flow] = \
+            c.flow_backoff_sweeps.get(m.flow, 0) + delay
         self._retry[key] = [sweep + delay, attempts, seq]
         self._step_losses += 1
         if self.tracer.enabled:
@@ -896,6 +922,10 @@ class FabricTransport:
                 c.retransmit_flits += 1
                 c.flow_bytes[m.flow] -= fb
                 c.flow_flits[m.flow] -= 1
+                c.flow_retransmit_bytes[m.flow] = \
+                    c.flow_retransmit_bytes.get(m.flow, 0) + fb
+                c.flow_retransmit_flits[m.flow] = \
+                    c.flow_retransmit_flits.get(m.flow, 0) + 1
                 if self.tracer.enabled:
                     # The trace is append-only but repair moves these
                     # crossings goodput -> retransmit: emit a compensating
@@ -981,6 +1011,8 @@ class FabricTransport:
                         self._arq_state(m.route[h], m.flow).cancel(st[2])
             self.cancelled_messages += 1
             self.cancelled_bytes += m.total_bytes
+            self.cancelled_flow_bytes[flow] = \
+                self.cancelled_flow_bytes.get(flow, 0) + m.total_bytes
             cancelled.append((mid, m.channel_index))
         for mid, _ in cancelled:
             del self._messages[mid]
@@ -1022,3 +1054,17 @@ class FabricTransport:
     def flow_link_bytes(self, flow: int) -> int:
         """Σ over links of this flow's crossed bytes (hop-weighted)."""
         return sum(c.flow_bytes.get(flow, 0) for c in self.counters)
+
+    def flow_fault_totals(self, flow: int) -> Dict[str, int]:
+        """Σ over links of one flow's fault-recovery costs — the network
+        side of the per-tenant cost ledger (:mod:`repro.obs.attrib`).
+        Summing each entry over every flow recovers the matching global
+        link counter exactly (integer equality)."""
+        out = {"retransmit_bytes": 0, "retransmit_flits": 0,
+               "backoff_sweeps": 0, "arq_stalls": 0}
+        for c in self.counters:
+            out["retransmit_bytes"] += c.flow_retransmit_bytes.get(flow, 0)
+            out["retransmit_flits"] += c.flow_retransmit_flits.get(flow, 0)
+            out["backoff_sweeps"] += c.flow_backoff_sweeps.get(flow, 0)
+            out["arq_stalls"] += c.flow_arq_stalls.get(flow, 0)
+        return out

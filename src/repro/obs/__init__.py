@@ -1,17 +1,26 @@
 """`repro.obs` — observability for the whole stack.
 
-Three pieces, one thread-through:
+Six pieces, one thread-through:
 
 * :mod:`repro.obs.trace` — sweep-granular typed events from executor,
   transport, memory, tenants, and chaos, with a Chrome/Perfetto exporter
-  (``to_chrome_trace``) and a zero-overhead disabled default
+  (``to_chrome_trace``), a streaming JSONL writer (``write_jsonl`` —
+  O(1) extra memory per event), and a zero-overhead disabled default
   (:data:`NULL_TRACER`);
 * :mod:`repro.obs.metrics` — the unified ``layer.object.metric``
   registry subsuming every scattered counter, with exact-consistency
   asserts against the legacy report fields;
 * :mod:`repro.obs.critpath` — post-hoc critical-path attribution
   decomposing the measured makespan into compute / network / memory /
-  fault-recovery sweeps, and the predicted-vs-measured makespan table.
+  fault-recovery sweeps, and the predicted-vs-measured makespan table;
+* :mod:`repro.obs.attrib` — the exact per-tenant cost ledger: every
+  byte, retransmission, backoff sweep, and restore charged to the flow
+  that incurred it, summing bit-exactly to the global counters;
+* :mod:`repro.obs.slo` — online SLO monitoring *inside* the serve loop:
+  windowed p50/p99 latency, goodput, and error-budget burn per tenant,
+  with typed ``slo_alert`` events emitted into the same trace;
+* :mod:`repro.obs.diff` — run-to-run metric regression diffing against a
+  committed baseline with per-metric tolerances (the CI drift gate).
 
 Quickstart::
 
@@ -22,22 +31,35 @@ Quickstart::
     print(crit.decomposition())            # exact sweep buckets
     write_chrome_trace(tr, "run.json")     # open in chrome://tracing
 """
+from .attrib import (CostLedger, LedgerRow, assert_ledger_consistent,
+                     assert_peers_uncharged, build_ledger, lineage_root,
+                     substrate_metrics)
 from .critpath import (CritPath, TaskAttribution, analyze, format_table,
                        makespan_row)
+from .diff import (MetricDelta, RegressionDiff, diff_against_baseline,
+                   diff_registries, make_baseline)
 from .metrics import (MetricsRegistry, assert_registry_consistent,
                       assert_trace_report_consistent, from_report,
                       from_trace, tenant_metrics)
+from .slo import SLOMonitor
 from .trace import (EVENT_FIELDS, FAULT_KINDS, NULL_TRACER, NullTracer,
-                    Tracer, coerce_tracer, to_chrome_trace,
-                    validate_chrome_trace, write_chrome_trace)
+                    Tracer, coerce_tracer, read_jsonl, to_chrome_trace,
+                    to_jsonl, validate_chrome_trace, write_chrome_trace,
+                    write_jsonl)
 
 __all__ = [
+    "CostLedger", "LedgerRow", "assert_ledger_consistent",
+    "assert_peers_uncharged", "build_ledger", "lineage_root",
+    "substrate_metrics",
     "CritPath", "TaskAttribution", "analyze", "format_table",
     "makespan_row",
+    "MetricDelta", "RegressionDiff", "diff_against_baseline",
+    "diff_registries", "make_baseline",
     "MetricsRegistry", "assert_registry_consistent",
     "assert_trace_report_consistent", "from_report", "from_trace",
     "tenant_metrics",
+    "SLOMonitor",
     "EVENT_FIELDS", "FAULT_KINDS", "NULL_TRACER", "NullTracer", "Tracer",
-    "coerce_tracer", "to_chrome_trace", "validate_chrome_trace",
-    "write_chrome_trace",
+    "coerce_tracer", "read_jsonl", "to_chrome_trace", "to_jsonl",
+    "validate_chrome_trace", "write_chrome_trace", "write_jsonl",
 ]

@@ -15,9 +15,15 @@ once recording — and asserts the observability contract:
   the measured makespan exactly, and the predicted-vs-measured table
   prints the §5 schedule error as a number.
 
+With ``--metrics`` it also writes an ``obs-metrics/v1`` document — one
+``MetricsRegistry.to_json()`` per app — the candidate side of the CI
+regression gate (``scripts/obs_diff.py`` diffs it against the committed
+``results/obs_baseline.json``).
+
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.obs.smoke [--ndev 4] \
-        [--out results/obs_smoke.json] [--trace results/obs_trace.json]
+        [--out results/obs_smoke.json] [--trace results/obs_trace.json] \
+        [--metrics results/obs_metrics.json]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -65,6 +71,9 @@ def main() -> int:
     ap.add_argument("--out", default="results/obs_smoke.json")
     ap.add_argument("--trace", default=None,
                     help="write the stencil run's Chrome trace JSON here")
+    ap.add_argument("--metrics", default=None,
+                    help="write the per-app obs-metrics/v1 registry "
+                         "document here (the diff-gate candidate)")
     args = ap.parse_args()
 
     from ..exec import bind_programs, execute
@@ -76,6 +85,7 @@ def main() -> int:
 
     rows = []
     app_records = {}
+    app_registries = {}
     stencil_tracer = None
     for app in APPS_UNDER_TEST:
         graph, design = _compile(app, args.ndev)
@@ -92,7 +102,9 @@ def main() -> int:
 
         # Byte agreement: trace events == report counters, exactly.
         assert_trace_report_consistent(tracer, res.report)
-        assert_registry_consistent(from_report(res.report), res.report)
+        reg = from_report(res.report)
+        assert_registry_consistent(reg, res.report)
+        app_registries[app] = reg
 
         # Attribution: exact decomposition (asserted inside makespan_row).
         crit = analyze(tracer, sweeps=res.report.sweeps)
@@ -119,6 +131,17 @@ def main() -> int:
         doc = write_chrome_trace(stencil_tracer, args.trace)
         print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
               f"to {args.trace}")
+
+    if args.metrics:
+        from .diff import METRICS_FORMAT
+        os.makedirs(os.path.dirname(args.metrics) or ".", exist_ok=True)
+        with open(args.metrics, "w") as f:
+            json.dump({"format": METRICS_FORMAT, "ndev": args.ndev,
+                       "apps": {a: r.to_json()
+                                for a, r in app_registries.items()}},
+                      f, indent=2, default=float)
+            f.write("\n")
+        print(f"wrote metrics document to {args.metrics}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -56,6 +56,11 @@ EVENT_FIELDS: Dict[str, Tuple[str, ...]] = {
     "tenant_admit": ("flow", "name"),
     "tenant_cancel": ("flow", "name", "reason"),
     "barrier": ("label", "flow"),
+    # Online SLO monitoring (repro.obs.slo): a windowed metric crossed its
+    # tenant's declared threshold mid-run.  ``metric`` is one of
+    # ``p99_latency_s`` / ``p50_latency_s`` / ``burn_rate``; ``value`` the
+    # observed window value, ``threshold`` what the SLO allows.
+    "slo_alert": ("flow", "name", "metric", "value", "threshold"),
 }
 
 #: Sweeps with any of these kinds are ARQ/fault-recovery activity — the
@@ -149,6 +154,12 @@ class Tracer:
     def barrier(self, sweep: int, label: str, flow: int = 0) -> None:
         self.events.append(("barrier", sweep, label, flow))
 
+    # -- obs (the monitor writes into the same trace it reads) ---------------
+    def slo_alert(self, sweep: int, flow: int, name: str, metric: str,
+                  value: float, threshold: float) -> None:
+        self.events.append(("slo_alert", sweep, flow, name, metric,
+                            value, threshold))
+
     # -- queries -------------------------------------------------------------
     def __len__(self) -> int:
         return len(self.events)
@@ -168,6 +179,13 @@ class Tracer:
             d.update(zip(EVENT_FIELDS[e[0]], e[2:]))
             out.append(d)
         return out
+
+    # -- streaming JSONL export (module functions do the work) ---------------
+    def to_jsonl(self) -> str:
+        return to_jsonl(self)
+
+    def write_jsonl(self, path: str) -> int:
+        return write_jsonl(self, path)
 
     # -- byte summaries (the trace side of the conservation identities) ------
     def link_goodput_bytes(self) -> Dict[int, int]:
@@ -208,7 +226,7 @@ class NullTracer:
     note_link = task_fire = task_wait = channel_push = channel_pop = _noop
     flit_hop = flit_reclassify = retransmit = arq_backoff = _noop
     link_death = reroute = bank_burst = mem_issue = _noop
-    tenant_admit = tenant_cancel = barrier = _noop
+    tenant_admit = tenant_cancel = barrier = slo_alert = _noop
 
     def __len__(self) -> int:
         return 0
@@ -348,6 +366,14 @@ def to_chrome_trace(tracer: Tracer, *,
                 "ph": "i", "name": f"barrier:{label}", "cat": "ckpt",
                 "pid": pid, "tid": tid, "ts": ts(sweep), "s": "g",
                 "args": {"flow": flow}})
+        elif kind == "slo_alert":
+            flow, name, metric, value, threshold = e[2:]
+            pid, tid = tids.tid(-1, f"tenant:{name}")
+            events.append({
+                "ph": "i", "name": f"slo:{metric}", "cat": "slo",
+                "pid": pid, "tid": tid, "ts": ts(sweep), "s": "p",
+                "args": {"flow": flow, "value": value,
+                         "threshold": threshold}})
         elif kind in _INSTANT_KINDS:
             cat, name = _INSTANT_KINDS[kind]
             fields = dict(zip(EVENT_FIELDS[kind], e[2:]))
@@ -398,3 +424,75 @@ def write_chrome_trace(tracer: Tracer, path: str, *,
     with open(path, "w") as f:
         json.dump(doc, f)
     return doc
+
+
+# -- streaming JSONL export ---------------------------------------------------
+#
+# The Chrome exporter materializes a *second* full event list (one dict of
+# ~8 expanded fields per tuple) plus its serialized JSON before anything
+# reaches disk — roughly tripling peak memory for long serving runs.  The
+# JSONL path streams instead: events are encoded and written ONE LINE AT A
+# TIME, so beyond the tracer's own tuple list the peak extra memory is a
+# single encoded line (O(1) in the trace length, ~100–200 bytes).  A run
+# that records for hours can export continuously without ever holding a
+# second copy of its history.
+
+JSONL_FORMAT = "repro-obs-jsonl/v1"
+
+
+def iter_jsonl(tracer: Tracer):
+    """Yield the trace as JSONL lines (no trailing newlines): a header
+    line carrying the format tag and the link-endpoint metadata, then one
+    schema-expanded event per line in record order."""
+    yield json.dumps({"format": JSONL_FORMAT,
+                      "link_devs": {str(k): list(v) for k, v in
+                                    tracer.link_devs.items()},
+                      "events": len(tracer.events)})
+    for e in tracer.events:
+        d: Dict[str, Any] = {"kind": e[0], "sweep": e[1]}
+        d.update(zip(EVENT_FIELDS[e[0]], e[2:]))
+        yield json.dumps(d)
+
+
+def to_jsonl(tracer: Tracer) -> str:
+    """The whole trace as one JSONL string (small traces / tests — long
+    runs should stream with :func:`write_jsonl` instead)."""
+    return "\n".join(iter_jsonl(tracer)) + "\n"
+
+
+def write_jsonl(tracer: Tracer, path: str) -> int:
+    """Stream the trace to ``path`` as JSONL; returns the event count.
+
+    Memory bound: one encoded line at a time — never a second full copy
+    of the event list (see the section comment above).
+    """
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    n = 0
+    with open(path, "w") as f:
+        for line in iter_jsonl(tracer):
+            f.write(line)
+            f.write("\n")
+            n += 1
+    return n - 1   # header line is not an event
+
+
+def read_jsonl(path: str) -> Tracer:
+    """Rehydrate a :class:`Tracer` from a :func:`write_jsonl` file — the
+    round-trip is exact (tuple-for-tuple), so Chrome export and every
+    byte-summary query work identically on the reloaded trace."""
+    t = Tracer()
+    with open(path) as f:
+        header = json.loads(f.readline())
+        if header.get("format") != JSONL_FORMAT:
+            raise ValueError(f"not a {JSONL_FORMAT} file: {path}")
+        t.link_devs = {int(k): (int(v[0]), int(v[1]))
+                       for k, v in header.get("link_devs", {}).items()}
+        for line in f:
+            if not line.strip():
+                continue
+            d = json.loads(line)
+            kind = d["kind"]
+            t.events.append(tuple([kind, d["sweep"]]
+                                  + [d[fld] for fld in EVENT_FIELDS[kind]]))
+    return t

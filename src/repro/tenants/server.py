@@ -358,7 +358,14 @@ class TenantServer:
     # -- the shared sweep loop -----------------------------------------------
     def run(self, *, faults: Sequence[DeviceKill] = (),
             max_sweeps: Optional[int] = None,
-            checkpoint_every: Optional[int] = None) -> ServeOutcome:
+            checkpoint_every: Optional[int] = None,
+            monitor=None) -> ServeOutcome:
+        """``monitor`` is an optional :class:`repro.obs.slo.SLOMonitor`:
+        its ``observe(server, sweep)`` runs once per sweep *inside* the
+        serve loop, reading the tracer incrementally and emitting typed
+        ``slo_alert`` events into the same trace.  It only ever reads the
+        substrate and appends trace events, so a monitored run is
+        bit-identical to an unmonitored one (asserted by perf v8)."""
         injector = FailureInjector(
             fail_at_steps=[k.sweep for k in faults])
         kills = {k.sweep: k for k in faults}
@@ -402,6 +409,11 @@ class TenantServer:
                     rec = self.records[i]
                     if rec.state is not None:
                         rec.state.mem_deliver(local, rid, sweep)
+            if monitor is not None:
+                # Online SLO monitoring: windowed latency / goodput / burn
+                # rate per tenant, computed live from the trace the
+                # substrate just appended to.
+                monitor.observe(self, sweep)
             if checkpoint_every is not None \
                     and (sweep + 1) % checkpoint_every == 0:
                 from ..exec.snapshot import save_snapshot

@@ -89,6 +89,11 @@ class AdmissionController:
             t: AdmissionStats() for t in self.slos}
         self.inflight: Dict[int, int] = {t: 0 for t in self.slos}
         self._queued_work: Dict[int, float] = {t: 0.0 for t in self.slos}
+        # Live observability signal (repro.obs.slo): a tenant burning its
+        # error budget has its effective service rate discounted, so the
+        # deadline feasibility test turns pessimistic *while* the burn is
+        # happening instead of after the post-hoc report.  1.0 = no signal.
+        self._rate_scale: Dict[int, float] = {}
         # Pending heap keyed by deterministic FIFO order; priorities are
         # recomputed against `now` at release time (aging is a function of
         # age, so the *relative* order only changes across tenants).
@@ -101,9 +106,11 @@ class AdmissionController:
         st = self.stats[r.tenant]
         st.offered += 1
         # Work ahead of this request at the tenant's weighted rate: its own
-        # in-service + queued bytes, priced in seconds.
-        backlog_s = self._queued_work[r.tenant] / self.rate[r.tenant]
-        finish = now + backlog_s + r.size / self.rate[r.tenant]
+        # in-service + queued bytes, priced in seconds.  The rate is
+        # discounted by the live burn-rate signal (see note_burn).
+        rate = self.rate[r.tenant] * self._rate_scale.get(r.tenant, 1.0)
+        backlog_s = self._queued_work[r.tenant] / rate
+        finish = now + backlog_s + r.size / rate
         if finish > slo.deadline(r):
             st.rejected += 1
             return REJECT
@@ -159,6 +166,22 @@ class AdmissionController:
         """A request finished service: free its slot and its queued work."""
         self.inflight[r.tenant] -= 1
         self._queued_work[r.tenant] -= r.size
+
+    # -- live observability signal -------------------------------------------
+    def note_burn(self, tenant: int, burn_rate: float) -> None:
+        """Feed one tenant's error-budget burn rate from the online SLO
+        monitor (:meth:`repro.obs.slo.SLOMonitor.feed`).  A burn rate
+        above 1.0 (budget exhausted at the observed pace) discounts the
+        tenant's effective service rate proportionally, so admission sheds
+        load it can no longer carry *now*; burn <= 1.0 restores the full
+        declared rate.  Unknown tenants are ignored (the monitor may see
+        flows the controller never admitted)."""
+        if tenant not in self.slos:
+            return
+        self._rate_scale[tenant] = 1.0 / max(1.0, float(burn_rate))
+
+    def rate_scale(self, tenant: int) -> float:
+        return self._rate_scale.get(tenant, 1.0)
 
     # -- queries -------------------------------------------------------------
     @property

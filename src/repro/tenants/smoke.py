@@ -22,7 +22,12 @@ The run asserts the tentpole's acceptance criteria end to end:
   solo run anyway;
 * **weighted shares** — the fluid-model oversubscription check
   (:func:`repro.tenants.isolation_check`) holds at the capacity measured
-  from the co-run.
+  from the co-run;
+* **attribution** — the per-tenant cost ledger
+  (:func:`repro.obs.build_ledger`) sums bit-exactly to the global
+  counters on both runs, the kill charges tenant ``a``'s lineage
+  (cancelled bytes + restore sweeps) while its peer pays exactly zero,
+  and an online :class:`repro.obs.SLOMonitor` rides the serve loop.
 
 Writes the per-tenant latency/goodput JSON (the CI artifact):
 
@@ -57,6 +62,9 @@ def main() -> int:
     from ..exec import bind_programs, execute
     from ..net import cluster_fabric
     from ..net.transport import NetConfig
+    from ..obs import (SLOMonitor, analyze, assert_ledger_consistent,
+                       assert_peers_uncharged, build_ledger,
+                       substrate_metrics)
     from ..obs.trace import Tracer, write_chrome_trace
     from . import (SLO, DeviceKill, Tenant, TenantServer, bit_identical,
                    isolation_check)
@@ -89,10 +97,13 @@ def main() -> int:
         ]
 
     # -- serve 1: clean co-run over the shared fabric ------------------------
-    tracer = Tracer() if args.trace else None
+    # Always traced: the cost ledger and the online SLO monitor both read
+    # the trace (the Chrome export is only written when --trace is given).
+    tracer = Tracer()
+    monitor = SLOMonitor(window=32)
     server = TenantServer(fabric, tenants(), net_config=net_config,
                           tracer=tracer)
-    out = server.run()
+    out = server.run(monitor=monitor)
     for n in specs:
         rec = out.record(n)
         assert rec.status == "done", f"tenant {n}: {rec.status}"
@@ -105,8 +116,18 @@ def main() -> int:
     assert contended, "placement bug: no link carried both tenants"
     conservation = out.conservation
 
+    # Cost ledger over the clean co-run: rows must sum bit-exactly to the
+    # global critical-path and registry totals (the tentpole invariant).
+    crit = analyze(tracer, sweeps=out.sweeps)
+    ledger = build_ledger(server, crit=crit)
+    assert_ledger_consistent(ledger, server, crit=crit,
+                             registry=substrate_metrics(server))
+    slo_summary = monitor.summary(out.sweeps)
+
     # -- serve 2: kill tenant a's device mid-flight, re-admit ----------------
-    fserver = TenantServer(fabric, tenants(), net_config=net_config)
+    ftracer = Tracer()
+    fserver = TenantServer(fabric, tenants(), net_config=net_config,
+                           tracer=ftracer)
     fout = fserver.run(faults=[DeviceKill(device=2, sweep=args.kill_sweep)])
     killed = fout.record("a")
     assert killed.status == "killed" and killed.killed_at == args.kill_sweep
@@ -126,6 +147,18 @@ def main() -> int:
                                 - jnp.asarray(binding_a.reference()))))
     assert err <= binding_a.atol, f"recovered numerics diverged: {err}"
     fault_conservation = fout.conservation
+
+    # Kill attribution: the ledger still sums exactly, the cancelled bytes
+    # and restore sweeps land on tenant a's lineage, and the surviving
+    # peer is charged exactly zero fault cost.
+    fcrit = analyze(ftracer, sweeps=fout.sweeps)
+    fledger = build_ledger(fserver, crit=fcrit)
+    assert_ledger_consistent(fledger, fserver, crit=fcrit,
+                             registry=substrate_metrics(fserver))
+    assert_peers_uncharged(fledger, ["a"])
+    fby = fledger.by_lineage()
+    assert fby["a"]["cancelled_bytes"] > 0
+    assert fby["a"]["restore_sweeps"] > 0
 
     # -- weighted-share isolation at the measured capacity -------------------
     sweep_time = net_config.sweep_time_s
@@ -152,8 +185,12 @@ def main() -> int:
               f"goodput {row['goodput_Bps']:.3e} B/s")
     print(f"fault run: killed at sweep {killed.killed_at}, recovered as "
           f"{killed.recovered_as} in {fout.sweeps} sweeps, parity {err:.1e}")
+    print(f"attrib: ledger exact on both runs; kill charged "
+          f"a lineage {fby['a']['cancelled_bytes']} cancelled bytes + "
+          f"{fby['a']['restore_sweeps']} restore sweeps, peer b zero")
+    print(f"slo: {len(monitor.alerts)} alert(s) over the clean co-run")
 
-    if tracer is not None:
+    if args.trace:
         doc = write_chrome_trace(tracer, args.trace)
         print(f"wrote Chrome trace ({len(doc['traceEvents'])} events) "
               f"to {args.trace}")
@@ -172,7 +209,10 @@ def main() -> int:
                 "recovered_parity_err": err,
                 "sweeps": fout.sweeps,
                 "conservation": fault_conservation,
+                "attrib": fledger.to_json(),
             },
+            "attrib": ledger.to_json(),
+            "slo": slo_summary,
             "isolation": iso,
         }, f, indent=2, default=float)
         f.write("\n")

@@ -362,6 +362,121 @@ def test_trace_bank_conservation_fixed():
     check_trace_bank_conservation(1, 32, 1, 32, [(0, 0, 1)], 1)
 
 
+# ---------------------------------------------------------------------------
+# P5 — per-flow fault attribution (repro.obs.attrib substrate): on a lossy
+# link shared by two tenant flows with weights w:1, (a) the per-flow fault
+# dictionaries sum exactly to the global link counters at every point, and
+# (b) wire-service attempts (goodput + retransmissions — the quantity the
+# cost ledger charges) split by DRR weight within the scheduler's ±2-flit
+# deficit tolerance while both flows are backlogged.  And killing one flow
+# charges its peer exactly zero fault cost.
+# ---------------------------------------------------------------------------
+
+def check_weighted_fault_attribution(seed, w, drop):
+    """Two flows, weights w:1, one lossy shared link.  Many 1-flit
+    messages keep both flows backlogged so neither forfeits its DRR
+    deficit; the attempt split is sampled at the first sweep with >= 30
+    attempts (both still backlogged), the exact per-flow conservation
+    identities at drain."""
+    from repro.net.faults import FaultModel, LinkFaults
+    fab = build_fabric(DaisyChain(2))
+    fm = FaultModel(seed=seed, default=LinkFaults(drop=drop),
+                    fail_threshold=None, backoff_base=1, backoff_cap=1)
+    tr = FabricTransport(fab, _net_cfg(64, 8, 2),
+                         flow_weights={0: float(w), 1: 1.0}, faults=fm)
+    msgs = 24                      # 1 flit each — per-message blocking
+    for i in range(msgs):          # can't skew the arbiter
+        tr.submit(0, 0, 1, 64, 0, flow=0)
+        tr.submit(1, 0, 1, 64, 0, flow=1)
+    link = fab.route(0, 1)[0]
+    sweep, snap = 0, None
+    while tr.active:
+        tr.step(sweep)
+        c = tr.counters[link]
+        if snap is None and c.attempt_flits >= 30:
+            att = {f: c.flow_flits.get(f, 0)
+                   + c.flow_retransmit_flits.get(f, 0) for f in (0, 1)}
+            snap = att
+        sweep += 1
+        assert sweep < 100_000, "lossy link failed to drain"
+    assert tr.total_delivered_bytes == 2 * msgs * 64
+    # (a) exact per-flow conservation, every fault column, every link.
+    for c in tr.counters:
+        assert sum(c.flow_bytes.values()) == c.bytes
+        assert sum(c.flow_flits.values()) == c.flits
+        assert sum(c.flow_retransmit_bytes.values()) == c.retransmit_bytes
+        assert sum(c.flow_retransmit_flits.values()) == c.retransmit_flits
+        assert sum(c.flow_backoff_sweeps.values()) == c.backoff_sweeps
+        assert sum(c.flow_arq_stalls.values()) == c.arq_stalls
+    # (b) weighted split of wire attempts, ±2 flits (DRR deficit bound).
+    assert snap is not None, "snapshot threshold never reached"
+    total = snap[0] + snap[1]
+    expected_light = total * (1.0 / (w + 1.0))
+    assert abs(snap[1] - expected_light) <= 2, \
+        f"w={w} drop={drop} seed={seed}: attempts {snap} vs " \
+        f"expected light share {expected_light:.1f}"
+
+
+def check_kill_peer_zero_charge(topo_idx, kill_after, nbytes, mtu, credits):
+    """Cancelling one flow mid-flight (the transport half of a tenant
+    kill) charges every cancelled byte to that flow and exactly nothing —
+    no fault column at all — to the surviving peer."""
+    topo = _TOPOS[topo_idx % len(_TOPOS)]
+    fab = build_fabric(topo)
+    tr = FabricTransport(fab, _net_cfg(mtu, credits, 2),
+                         flow_weights={0: 1.0, 1: 1.0})
+    tr.submit(0, 0, 1, nbytes, 0, flow=0)      # the victim
+    tr.submit(1, 0, 1, nbytes, 0, flow=1)      # the peer
+    sweep, done = 0, []
+    while sweep < kill_after and tr.active:
+        done += tr.step(sweep)
+        sweep += 1
+    tr.cancel_flow(0)
+    while tr.active:
+        done += tr.step(sweep)
+        sweep += 1
+        assert sweep < 100_000
+    # Cancelled bytes land on the victim only; totals stay exact.
+    assert tr.cancelled_flow_bytes.get(1, 0) == 0
+    assert sum(tr.cancelled_flow_bytes.values()) == tr.cancelled_bytes
+    # The peer's fault ledger is exactly zero in every column.
+    peer = tr.flow_fault_totals(1)
+    assert peer == {"retransmit_bytes": 0, "retransmit_flits": 0,
+                    "backoff_sweeps": 0, "arq_stalls": 0}
+    # The peer's message still completed despite the mid-flight kill.
+    assert any(ch == 1 for _mid, ch in done)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=999),
+       w=st.sampled_from([1, 2, 3]),
+       drop=st.sampled_from([0.0, 0.05, 0.1, 0.2]))
+def test_weighted_fault_attribution_property(seed, w, drop):
+    check_weighted_fault_attribution(seed, w, drop)
+
+
+@settings(max_examples=25, deadline=None)
+@given(topo_idx=st.integers(min_value=0, max_value=len(_TOPOS) - 1),
+       kill_after=st.integers(min_value=0, max_value=6),
+       nbytes=st.integers(min_value=1, max_value=5000),
+       mtu=st.sampled_from([32, 64, 256]),
+       credits=st.integers(min_value=1, max_value=6))
+def test_kill_peer_zero_charge_property(topo_idx, kill_after, nbytes, mtu,
+                                        credits):
+    check_kill_peer_zero_charge(topo_idx, kill_after, nbytes, mtu, credits)
+
+
+def test_weighted_fault_attribution_fixed():
+    check_weighted_fault_attribution(3, 2, 0.1)
+    check_weighted_fault_attribution(7, 3, 0.2)
+    check_weighted_fault_attribution(0, 1, 0.0)
+
+
+def test_kill_peer_zero_charge_fixed():
+    check_kill_peer_zero_charge(1, 3, 4000, 64, 2)
+    check_kill_peer_zero_charge(0, 0, 1, 32, 1)
+
+
 def test_hypothesis_shim_declares_itself():
     """The compat import must resolve either way — and when hypothesis is
     absent the @given tests above report SKIPPED, not errors."""

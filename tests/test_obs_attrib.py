@@ -1,0 +1,339 @@
+"""repro.obs.attrib / slo / diff — the per-tenant cost ledger, the online
+SLO monitor, and the regression diff gate.
+
+The attribution contract, asserted end to end on real tenant co-runs:
+
+* every ledger row's columns sum **bit-exactly** (integer equality) to
+  the global transport / memory / critical-path / registry totals —
+  clean, lossy, and kill paths alike (``assert_ledger_consistent``);
+* on a lossy shared fabric both tenants are charged retransmissions and
+  the per-flow fault columns reconcile with the link counters exactly;
+* a :class:`DeviceKill` charges its cancelled bytes and restore sweeps
+  to the killed tenant's lineage and **exactly zero** fault cost to its
+  peers (``assert_peers_uncharged``);
+* the :class:`SLOMonitor` is transparent (a monitored run is
+  bit-identical to an unmonitored one), raises debounced ``slo_alert``
+  events into the same trace (visible in the Chrome export), and feeds
+  live burn rates into admission control;
+* the JSONL trace writer round-trips tuple-for-tuple;
+* :func:`diff_registries` / :func:`diff_against_baseline` flag drift,
+  tolerate within-tolerance change, fail on vanished series, and treat
+  new series as informational.
+"""
+import json
+
+import pytest
+
+from repro.apps import APPS
+from repro.compiler import CompileOptions, compile as tapa_compile
+from repro.core import fpga_ring_cluster
+from repro.net import NetConfig, cluster_fabric
+from repro.net.faults import FaultModel, LinkFaults
+from repro.obs import (MetricsRegistry, SLOMonitor, Tracer, analyze,
+                       assert_ledger_consistent, assert_peers_uncharged,
+                       build_ledger, diff_against_baseline, diff_registries,
+                       lineage_root, make_baseline, read_jsonl,
+                       substrate_metrics, to_chrome_trace, to_jsonl,
+                       validate_chrome_trace, write_jsonl)
+from repro.tenants import (SLO, DeviceKill, Tenant, TenantServer,
+                           bit_identical)
+from repro.tenants.slo import ADMIT, REJECT, AdmissionController
+from repro.tenants.traffic import Request
+
+_OPTS = CompileOptions(balance_kind="LUT", balance_tol=0.8,
+                       exact_limit=1500, floorplan_devices=(0,))
+_SPECS = {"a": {"seed": 0}, "b": {"seed": 7}}
+
+
+@pytest.fixture(scope="module")
+def designs():
+    graphs = {n: APPS["stencil"].build_graph(2) for n in _SPECS}
+    return {n: tapa_compile(graphs[n], fpga_ring_cluster(2), _OPTS)
+            for n in _SPECS}
+
+
+def _tenants(designs):
+    return [Tenant("a", designs["a"], device_map=[0, 2],
+                   slo=SLO(1e-3, weight=2.0), inputs=_SPECS["a"]),
+            Tenant("b", designs["b"], device_map=[0, 1],
+                   slo=SLO(1e-3, weight=1.0), inputs=_SPECS["b"])]
+
+
+@pytest.fixture(scope="module")
+def clean_run(designs):
+    """Unmonitored baseline + monitored traced co-run on a clean fabric."""
+    base = TenantServer(cluster_fabric(fpga_ring_cluster(4)),
+                        _tenants(designs)).run()
+    tracer = Tracer()
+    server = TenantServer(cluster_fabric(fpga_ring_cluster(4)),
+                          _tenants(designs), tracer=tracer)
+    # A vanishingly small latency limit makes every completion an SLO
+    # breach, so the alert path is exercised on a healthy run.
+    monitor = SLOMonitor(window=32, latency_limit_s=1e-9)
+    out = server.run(monitor=monitor)
+    return base, server, out, tracer, monitor
+
+
+@pytest.fixture(scope="module")
+def lossy_run(designs):
+    tracer = Tracer()
+    fm = FaultModel(seed=3, default=LinkFaults(drop=0.10, corrupt=0.05),
+                    fail_threshold=None)
+    server = TenantServer(cluster_fabric(fpga_ring_cluster(4)),
+                          _tenants(designs),
+                          net_config=NetConfig(faults=fm), tracer=tracer)
+    out = server.run()
+    return server, out, tracer
+
+
+@pytest.fixture(scope="module")
+def kill_run(designs):
+    tracer = Tracer()
+    server = TenantServer(cluster_fabric(fpga_ring_cluster(4)),
+                          _tenants(designs), tracer=tracer)
+    out = server.run(faults=[DeviceKill(device=2, sweep=2)])
+    return server, out, tracer
+
+
+# ---------------------------------------------------------------------------
+# The cost ledger.
+# ---------------------------------------------------------------------------
+
+def test_ledger_sums_exactly_on_clean_corun(clean_run):
+    _, server, out, tracer, _ = clean_run
+    crit = analyze(tracer, sweeps=out.sweeps)
+    ledger = build_ledger(server, crit=crit)
+    assert_ledger_consistent(ledger, server, crit=crit,
+                             registry=substrate_metrics(server))
+    assert {r.tenant for r in ledger.rows} == {"a", "b"}
+    # Columns the totals() view must reproduce, exactly.
+    totals = ledger.totals()
+    assert totals["net_bytes"] == sum(r.net_bytes for r in ledger.rows)
+    assert totals["net_bytes"] == \
+        sum(c.bytes for c in server.transport.counters)
+    # No faults on a clean fabric: every fault column is zero.
+    for r in ledger.rows:
+        assert all(v == 0 for v in r.fault_cost().values()), r.tenant
+    doc = ledger.to_json()
+    assert doc["format"] == "cost-ledger/v1"
+    assert len(doc["rows"]) == len(ledger.rows)
+    # The registry projection labels rows by tenant and lineage.
+    reg = ledger.to_registry()
+    for r in ledger.rows:
+        assert reg.value("attrib.tenant.net_bytes", 0, tenant=r.tenant,
+                         lineage=r.lineage) == r.net_bytes
+
+
+def test_ledger_lossy_charges_both_tenants_exactly(lossy_run):
+    server, out, tracer = lossy_run
+    crit = analyze(tracer, sweeps=out.sweeps)
+    ledger = build_ledger(server, crit=crit)
+    assert_ledger_consistent(ledger, server, crit=crit,
+                             registry=substrate_metrics(server))
+    by = ledger.by_lineage()
+    # Both tenants share lossy links, so both pay retransmissions — and
+    # the split sums back to the global counter bit-exactly.
+    assert by["a"]["retransmit_bytes"] > 0
+    assert by["b"]["retransmit_bytes"] > 0
+    assert by["a"]["retransmit_bytes"] + by["b"]["retransmit_bytes"] == \
+        sum(c.retransmit_bytes for c in server.transport.counters)
+    assert ledger.totals()["fault_sweeps"] > 0
+
+
+def test_kill_charges_victim_lineage_not_peers(kill_run):
+    server, out, tracer = kill_run
+    assert out.record("a").status == "killed"
+    crit = analyze(tracer, sweeps=out.sweeps)
+    ledger = build_ledger(server, crit=crit)
+    assert_ledger_consistent(ledger, server, crit=crit)
+    assert_peers_uncharged(ledger, ["a"])
+    by = ledger.by_lineage()
+    # The victim's lineage pays the kill: cancelled in-flight bytes and
+    # the recovered incarnation's restore sweeps.
+    assert by["a"]["cancelled_bytes"] > 0
+    assert by["a"]["restore_sweeps"] > 0
+    # The peer pays exactly nothing, in every fault column.
+    for col in ("cancelled_bytes", "restore_sweeps", "fault_sweeps",
+                "retransmit_bytes", "backoff_sweeps", "arq_stalls"):
+        assert by["b"][col] == 0, col
+    # Both incarnations fold into one lineage row set.
+    assert lineage_root("a+recovered") == "a"
+    assert {r.lineage for r in ledger.rows} == {"a", "b"}
+    assert sum(1 for r in ledger.rows if r.lineage == "a") == 2
+
+
+def test_peers_uncharged_raises_on_charged_peer(lossy_run):
+    server, out, tracer = lossy_run
+    ledger = build_ledger(server, crit=analyze(tracer, sweeps=out.sweeps))
+    # On the lossy run *both* tenants carry fault cost, so naming only
+    # one of them as the victim must fail the zero-charge assert.
+    with pytest.raises(AssertionError):
+        assert_peers_uncharged(ledger, ["a"])
+
+
+# ---------------------------------------------------------------------------
+# The online SLO monitor.
+# ---------------------------------------------------------------------------
+
+def test_monitor_is_transparent_and_raises_alerts(clean_run):
+    base, _, out, tracer, monitor = clean_run
+    # Bit-identity: the monitor only reads the trace and appends alerts.
+    assert out.sweeps == base.sweeps
+    for n in _SPECS:
+        assert bit_identical(out.record(n).result.outputs,
+                             base.record(n).result.outputs), n
+    # The tiny latency limit fired p99 alerts for both tenants...
+    assert monitor.alerts
+    assert {a["tenant"] for a in monitor.alerts} == {"a", "b"}
+    assert all(a["metric"] == "p99_latency_s" for a in monitor.alerts)
+    # ...into the shared trace, rendered in the Chrome export.
+    assert tracer.count("slo_alert") == len(monitor.alerts)
+    doc = to_chrome_trace(tracer)
+    validate_chrome_trace(doc)
+    slo_events = [e for e in doc["traceEvents"] if e.get("cat") == "slo"]
+    assert len(slo_events) == len(monitor.alerts)
+    # The summary is JSON-ready and covers both tenants.
+    summary = monitor.summary(out.sweeps)
+    json.dumps(summary)
+    assert set(summary["tenants"]) == {"a", "b"}
+    for snap in summary["tenants"].values():
+        assert snap["completed"] >= 0
+        assert snap["p99_latency_s"] >= snap["p50_latency_s"] >= 0.0
+
+
+def test_monitor_alerts_are_debounced(clean_run):
+    _, _, out, _, monitor = clean_run
+    # Cooldown: per (tenant, metric), consecutive alerts are >= cooldown
+    # sweeps apart.
+    seen = {}
+    for a in monitor.alerts:
+        key = (a["tenant"], a["metric"])
+        if key in seen:
+            assert a["sweep"] - seen[key] >= monitor.cooldown, key
+        seen[key] = a["sweep"]
+
+
+def test_monitor_burn_feeds_admission_control():
+    slo = SLO(1e-3, weight=1.0, deadline_factor=2.0)
+    ctl = AdmissionController({0: slo}, {0: 1e6})
+    # A request feasible at the declared rate is admitted...
+    assert ctl.offer(Request(rid=0, tenant=0, t_arrival=0.0,
+                             size=1000.0), 0.0) == ADMIT
+    ctl.complete(Request(rid=0, tenant=0, t_arrival=0.0, size=1000.0))
+    # ...but after the monitor reports a 5x budget burn the effective
+    # rate is discounted 5x and the same offer is shed at the door.
+    ctl.note_burn(0, 5.0)
+    assert ctl.rate_scale(0) == pytest.approx(0.2)
+    assert ctl.offer(Request(rid=1, tenant=0, t_arrival=0.0,
+                             size=1000.0), 0.0) == REJECT
+    # Burn back under 1.0 restores the declared rate.
+    ctl.note_burn(0, 0.5)
+    assert ctl.rate_scale(0) == 1.0
+    # Unknown tenants are ignored, not KeyErrored.
+    ctl.note_burn(99, 7.0)
+
+
+def test_monitor_rejects_bad_config():
+    with pytest.raises(ValueError):
+        SLOMonitor(window=0)
+    with pytest.raises(ValueError):
+        SLOMonitor(burn_alert=0.0)
+    with pytest.raises(ValueError):
+        SLOMonitor(cooldown=-1)
+
+
+# ---------------------------------------------------------------------------
+# JSONL trace streaming.
+# ---------------------------------------------------------------------------
+
+def test_jsonl_round_trips_tuple_for_tuple(clean_run, tmp_path):
+    _, _, _, tracer, _ = clean_run
+    path = tmp_path / "trace.jsonl"
+    n = write_jsonl(tracer, str(path))
+    assert n == len(tracer.events)
+    text = to_jsonl(tracer)
+    assert len(text.splitlines()) == len(tracer.events) + 1   # + header
+    header = json.loads(text.splitlines()[0])
+    assert header["format"] == "repro-obs-jsonl/v1"
+    assert header["events"] == len(tracer.events)
+    back = read_jsonl(str(path))
+    assert back.events == tracer.events
+    assert back.link_devs == tracer.link_devs
+    # The rehydrated trace still exports a valid Chrome document.
+    validate_chrome_trace(to_chrome_trace(back))
+
+
+# ---------------------------------------------------------------------------
+# Regression diffing.
+# ---------------------------------------------------------------------------
+
+def _reg(**vals):
+    r = MetricsRegistry()
+    for name, v in vals.items():
+        r.counter_add(name.replace("_", "."), v, link=0)
+    return r
+
+
+def test_diff_identical_registries_is_ok():
+    d = diff_registries(_reg(net_bytes=100), _reg(net_bytes=100))
+    assert d.ok and not d.violations and not d.removed
+    assert d.compared == 1
+
+
+def test_diff_flags_drift_beyond_tolerance():
+    d = diff_registries(_reg(net_bytes=100), _reg(net_bytes=120))
+    assert not d.ok
+    assert d.violations[0].metric == "net.bytes"
+    assert d.violations[0].kind == "drift"
+    assert "DRIFT" in d.format()
+    # The same change passes inside a 20% relative tolerance.
+    d2 = diff_registries(_reg(net_bytes=100), _reg(net_bytes=120),
+                         tolerances={"net.bytes": 0.2})
+    assert d2.ok
+
+
+def test_diff_removed_series_fails_added_is_informational():
+    base = _reg(net_bytes=100, mem_bytes=50)
+    cand = _reg(net_bytes=100, new_metric=7)
+    d = diff_registries(base, cand)
+    assert not d.ok
+    assert [x.metric for x in d.removed] == ["mem.bytes"]
+    assert [x.metric for x in d.added] == ["new.metric"]
+    # Added alone does not fail the gate.
+    d2 = diff_registries(_reg(net_bytes=100), cand)
+    assert d2.ok and d2.added
+
+
+def test_diff_ignore_list_skips_nondeterministic_series():
+    d = diff_registries(_reg(busy_s=100), _reg(busy_s=999),
+                        ignore=["busy.s"])
+    assert d.ok and d.ignored == 1 and d.compared == 0
+
+
+def test_diff_against_baseline_document(tmp_path):
+    base_doc = make_baseline({"stencil": _reg(net_bytes=100)},
+                             tolerances={"net.bytes": 0.05},
+                             ignore=["exec.device.busy_s"])
+    assert base_doc["format"] == "obs-baseline/v1"
+    # Within tolerance: ok.  Beyond: drift.  Missing app: removed.
+    out = diff_against_baseline(base_doc, {"stencil": _reg(net_bytes=103)})
+    assert out["stencil"].ok
+    out = diff_against_baseline(base_doc, {"stencil": _reg(net_bytes=120)})
+    assert not out["stencil"].ok
+    out = diff_against_baseline(base_doc, {})
+    assert not out["stencil"].ok and out["stencil"].removed
+    # The documents round-trip through JSON files unchanged.
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps(base_doc))
+    from repro.obs.diff import load_json
+    assert load_json(str(p)) == base_doc
+    with pytest.raises(ValueError):
+        diff_against_baseline({"format": "bogus"}, {})
+
+
+def test_diff_report_is_json_ready():
+    d = diff_registries(_reg(net_bytes=100), _reg(net_bytes=120))
+    doc = d.to_json()
+    json.dumps(doc)
+    assert doc["format"] == "obs-diff/v1"
+    assert doc["ok"] is False and doc["violations"]
